@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timed runs + CSV output under results/."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def write_csv(name: str, header, rows):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / name
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt

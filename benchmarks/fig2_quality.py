@@ -1,0 +1,48 @@
+"""Paper Fig. 2: average quality per dataset for each routing strategy."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.spec import paper_testbed, TASKS
+from repro.core import baselines
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.workload.trace import build_trace
+
+from .common import write_csv
+from .table2_routing import optimize_router, select_operating_point
+
+
+def run(n_requests: int = 500, seed: int = 0):
+    trace = build_trace(n_requests, seed=seed)
+    cluster = paper_testbed()
+    ev = TraceEvaluator(trace, cluster, EvalConfig(concurrency=1))
+    results = {}
+    summaries = []
+    for name, a in [("Cloud Only", baselines.cloud_only(trace, cluster)),
+                    ("Edge Only", baselines.edge_only(trace, cluster)),
+                    ("Random Router", baselines.random_router(trace, cluster)),
+                    ("Round Robin Router", baselines.round_robin(trace, cluster))]:
+        res = ev.run_assignment(jnp.asarray(a))
+        results[name] = ev.per_dataset_quality(res)
+        summaries.append(ev.summarize(res))
+    opt, state, _ = optimize_router(ev)
+    genome = select_operating_point(opt, state, ev, summaries)
+    results["Proposed Router"] = ev.per_dataset_quality(
+        ev.run_thresholds(genome))
+
+    rows = [[name] + [f"{q[t]:.4f}" for t in TASKS]
+            for name, q in results.items()]
+    write_csv("fig2.csv", ["router"] + list(TASKS), rows)
+    return results
+
+
+def main():
+    results = run()
+    for name, q in results.items():
+        tag = name.lower().replace(" ", "_")
+        print(f"fig2.{tag},," + " ".join(f"{t}={q[t]:.3f}" for t in q))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 4: proposed-router performance at concurrency 1 / 4 / 8 / 10
+(closed-loop clients over the queued cluster model), plus the capacity-limit
+point the paper mentions (§V-E: degradation near concurrency 11)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster.spec import paper_testbed
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.workload.trace import build_trace
+
+from .common import write_csv
+from .table2_routing import optimize_router, select_operating_point
+
+PAPER = {1: (0.5462, 1.1137, 7.36e-5), 4: (0.5536, 1.1141, 7.36e-5),
+         8: (0.5542, 1.1660, 7.40e-5), 10: (0.5438, 1.2061, 7.41e-5)}
+
+
+def run(n_requests: int = 500, seed: int = 0,
+        levels=(1, 4, 8, 10, 12)):
+    trace = build_trace(n_requests, seed=seed)
+    cluster = paper_testbed()
+    # optimize thresholds once at concurrency 1 (as the paper does), then
+    # evaluate the same policy under increasing concurrency
+    from repro.core import baselines as B
+    ev1 = TraceEvaluator(trace, cluster, EvalConfig(concurrency=1))
+    summaries = [ev1.summarize(ev1.run_assignment(jnp.asarray(a)))
+                 for a in (B.cloud_only(trace, cluster),
+                           B.edge_only(trace, cluster),
+                           B.random_router(trace, cluster),
+                           B.round_robin(trace, cluster))]
+    opt, state, _ = optimize_router(ev1)
+    genome = select_operating_point(opt, state, ev1, summaries)
+
+    rows = []
+    out = {}
+    for g in levels:
+        ev = TraceEvaluator(trace, cluster, EvalConfig(concurrency=g))
+        s = ev.summarize(ev.run_thresholds(genome))
+        out[g] = s
+        pq, pt, pc = PAPER.get(g, ("", "", ""))
+        rows.append([g, f"{s['avg_quality']:.4f}", pq,
+                     f"{s['avg_response_time']:.4f}", pt,
+                     f"{s['avg_cost']:.3e}", pc])
+    write_csv("fig4.csv", ["concurrency", "avg_quality", "paper_quality",
+                           "avg_rt_s", "paper_rt_s", "avg_cost",
+                           "paper_cost"], rows)
+    return out
+
+
+def main():
+    out = run()
+    for g, s in out.items():
+        print(f"fig4.concurrency_{g},,q={s['avg_quality']:.4f} "
+              f"rt={s['avg_response_time']:.4f} cost={s['avg_cost']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

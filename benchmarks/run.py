@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (per harness convention) and
+writes full tables under results/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig2_quality, fig3_tradeoff, fig4_concurrency, nsga2_perf,
+                   roofline, table2_routing)
+    modules = [("table2_routing", table2_routing),
+               ("fig2_quality", fig2_quality),
+               ("fig3_tradeoff", fig3_tradeoff),
+               ("fig4_concurrency", fig4_concurrency),
+               ("nsga2_perf", nsga2_perf),
+               ("roofline", roofline)]
+    failures = 0
+    for name, mod in modules:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

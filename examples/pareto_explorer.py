@@ -1,0 +1,54 @@
+"""Explore the router's quality/cost/latency Pareto front (paper Fig. 3).
+
+Runs NSGA-II, prints the front, and shows how the Eq. (1) weights pick
+different operating points (low-latency vs low-cost deployments).
+
+    PYTHONPATH=src python examples/pareto_explorer.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.spec import paper_testbed
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.nsga2 import NSGA2, NSGA2Config
+from repro.core.pareto import hypervolume_mc
+from repro.core.policy import BOUNDS_HI, BOUNDS_LO
+
+
+def main():
+    from repro.workload.trace import build_trace
+    trace = build_trace(300, seed=1)
+    ev = TraceEvaluator(trace, paper_testbed(), EvalConfig(concurrency=1))
+    cfg = NSGA2Config(pop_size=64, n_generations=60,
+                      lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
+    opt = NSGA2(ev.make_fitness("continuous"), cfg)
+    state = opt.evolve_scan(jax.random.key(3), 60)
+    genomes, F = opt.pareto_front(state)
+    F = np.asarray(F)
+    order = np.argsort(F[:, 2])
+    print(f"Pareto front: {len(F)} policies  (RQ=1-quality, C=$, RT=s)")
+    print(f"{'RQ':>8s} {'C':>11s} {'RT':>8s}")
+    seen = set()
+    for i in order:
+        key = tuple(np.round(F[i], 4))
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"{F[i, 0]:8.4f} {F[i, 1]:11.3e} {F[i, 2]:8.4f}")
+
+    ref = jnp.asarray(F.max(0) * 1.1)
+    ideal = jnp.asarray(F.min(0))
+    hv = hypervolume_mc(jnp.asarray(F), ref, ideal, jax.random.key(0))
+    print(f"\nhypervolume (MC, ref=1.1·nadir): {float(hv):.3e}")
+
+    for name, w in [("latency-first", (0.2, 0.1, 0.7)),
+                    ("balanced", (1 / 3, 1 / 3, 1 / 3)),
+                    ("cost-first", (0.2, 0.7, 0.1))]:
+        g, f = opt.select_by_weights(state, jnp.asarray(w))
+        print(f"{name:14s} ω={w}:  quality={1 - float(f[0]):.4f} "
+              f"cost={float(f[1]):.3e}  rt={float(f[2]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""End-to-end serving driver (the paper's kind of system): batched requests
+routed by the NSGA-II policy across real JAX model instances standing in for
+the cloud/edge testbed, with continuous batching, a mid-run node failure,
+and straggler hedging.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    # the launcher is the real entry point; this example drives it with a
+    # failure injection so the fault-tolerance path is exercised visibly
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--requests", "24", "--optimize-router",
+         "--fail-node", "1", "--fail-at", "8"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))

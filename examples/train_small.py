@@ -1,0 +1,53 @@
+"""Train a reduced-config model for a few hundred steps on CPU with the full
+production stack: AdamW, microbatching, deterministic sharded data, periodic
+checkpoints, and a simulated crash + resume halfway through.
+
+    PYTHONPATH=src python examples/train_small.py [--arch stablelm-3b]
+"""
+import argparse
+import shutil
+import tempfile
+from pathlib import Path
+
+from repro.configs import get
+from repro.training.optim import OptConfig
+from repro.training.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    ckdir = Path(tempfile.mkdtemp()) / "ck"
+    cfg = get(args.arch).smoke()
+    print(f"training {cfg.name}: "
+          f"{cfg.param_counts()['total'] / 1e6:.1f}M params")
+    common = dict(seq_len=128, global_batch=8, microbatches=2,
+                  checkpoint_dir=str(ckdir), checkpoint_every=50,
+                  log_every=20, data_vocab=64, data_chains=2, data_branch=4,
+                  opt=OptConfig(lr=3e-3))
+
+    half = args.steps // 2
+    print(f"\n-- phase 1: steps 0..{half}, then simulated crash --")
+    Trainer(cfg, TrainConfig(steps=half, **common)).run(
+        resume=False,
+        callback=lambda s, m: print(f"  step {s:4d} nll {m['nll']:.4f} "
+                                    f"tok/s {m['tokens_per_s']:.0f}"))
+
+    print(f"\n-- phase 2: restart from checkpoint, steps {half}.."
+          f"{args.steps} --")
+    t = Trainer(cfg, TrainConfig(steps=args.steps, **common))
+    print(f"  resuming from step {t.ckpt.latest_step()}")
+    _, _, hist = t.run(
+        resume=True,
+        callback=lambda s, m: print(f"  step {s:4d} nll {m['nll']:.4f} "
+                                    f"tok/s {m['tokens_per_s']:.0f}"))
+    print(f"\nfinal nll: {hist[-1]['nll']:.4f} (started ~{hist[0]['nll']:.2f}"
+          " — loss decreases on the Markov-mixture corpus)")
+    shutil.rmtree(ckdir.parent, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .spec import (ClusterArrays, ClusterSpec, LinkSpec, ModelSpec, NodeSpec,
+                   paper_testbed)
+
+__all__ = ["ClusterSpec", "NodeSpec", "ModelSpec", "LinkSpec", "ClusterArrays",
+           "paper_testbed"]

@@ -1,0 +1,78 @@
+"""Monitoring module (paper §IV-B.6: q_j "obtained from the monitoring
+module"; §VI future work: "real-time monitoring mechanisms for node and model
+status, coupled with fault-tolerant strategies").
+
+Tracks, per node: outstanding request count (the q_j feature), health state
+with heartbeat expiry, and EWMA latency per (node, model) used for straggler
+detection (hedging threshold) by the serving scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class NodeStats:
+    outstanding: int = 0
+    total_dispatched: int = 0
+    total_completed: int = 0
+    total_failed: int = 0
+    healthy: bool = True
+    last_heartbeat: float = 0.0
+    ewma_latency: float = 0.0
+    ewma_alpha: float = 0.2
+
+
+class ClusterMonitor:
+    """Thread-light monitor; all methods take an explicit ``now`` so the same
+    code runs under the discrete-event simulator and in wall-clock serving."""
+
+    def __init__(self, n_nodes: int, heartbeat_timeout: float = 10.0):
+        self.stats: Dict[int, NodeStats] = {j: NodeStats() for j in range(n_nodes)}
+        self.heartbeat_timeout = heartbeat_timeout
+
+    # -- data plane callbacks -------------------------------------------------
+    def on_dispatch(self, node: int) -> None:
+        s = self.stats[node]
+        s.outstanding += 1
+        s.total_dispatched += 1
+
+    def on_complete(self, node: int, latency: float) -> None:
+        s = self.stats[node]
+        s.outstanding = max(0, s.outstanding - 1)
+        s.total_completed += 1
+        s.ewma_latency = (s.ewma_alpha * latency
+                          + (1 - s.ewma_alpha) * (s.ewma_latency or latency))
+
+    def on_failure(self, node: int) -> None:
+        s = self.stats[node]
+        s.outstanding = max(0, s.outstanding - 1)
+        s.total_failed += 1
+
+    def heartbeat(self, node: int, now: Optional[float] = None) -> None:
+        s = self.stats[node]
+        s.last_heartbeat = time.monotonic() if now is None else now
+        s.healthy = True
+
+    def mark_down(self, node: int) -> None:
+        self.stats[node].healthy = False
+
+    def sweep(self, now: float) -> None:
+        """Expire nodes whose heartbeat is stale."""
+        for s in self.stats.values():
+            if now - s.last_heartbeat > self.heartbeat_timeout:
+                s.healthy = False
+
+    # -- router-facing views ---------------------------------------------------
+    def queue_lengths(self) -> Tuple[int, ...]:
+        return tuple(self.stats[j].outstanding for j in sorted(self.stats))
+
+    def healthy_mask(self) -> Tuple[bool, ...]:
+        return tuple(self.stats[j].healthy for j in sorted(self.stats))
+
+    def straggler_threshold(self, node: int, factor: float = 3.0) -> float:
+        """Hedge a request if it exceeds factor × EWMA latency of its node."""
+        base = self.stats[node].ewma_latency
+        return factor * base if base > 0 else float("inf")

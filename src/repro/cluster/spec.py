@@ -1,0 +1,284 @@
+"""Cloud-edge cluster specification (paper §III / §V-C).
+
+A cluster is a set of nodes N = N_cloud ∪ N_edge, a global model set M, and a
+deployment map M(n_j) ⊆ M (the paper's model deployment function). The routing
+solution space is S = {(n_j, m_k) | m_k ∈ M(n_j)} — we enumerate it once as a
+flat *pair table* so both the NSGA-II fitness evaluator (JAX) and the runtime
+router can index decisions by a single integer.
+
+``ClusterArrays`` is the jnp-struct view consumed by ``repro.core.fitness``.
+
+Quality model
+-------------
+q(r, m) = clip(base[m, task] + slope_m · (0.5 − difficulty_r) + ε(r, m), 0, 1)
+
+Large (cloud) models have a flat slope — they absorb hard requests; small
+(edge) models degrade steeply with difficulty. ε is deterministic per
+(request, model) noise so the whole objective is reproducible. Constants are
+calibrated against Table II anchors (see workload/calibration.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+TASKS = ("mbpp", "gsm8k", "squad", "hellaswag")
+TASK_INDEX = {t: i for i, t in enumerate(TASKS)}
+MODEL_TYPES = ("instruct", "coder", "math", "general")
+MODEL_TYPE_INDEX = {t: i for i, t in enumerate(MODEL_TYPES)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One LLM in the global model set M (paper §III)."""
+
+    name: str
+    model_type: str                 # 'instruct' | 'coder' | 'math' | 'general'
+    params_b: float                 # billions of parameters
+    price_per_mtok: float           # $ per 1e6 tokens (Together.ai-style)
+    base_quality: Tuple[float, float, float, float]  # per TASKS order
+    difficulty_slope: float         # quality sensitivity to request difficulty
+    verbosity: float = 1.0          # response-length multiplier vs task mean
+
+    def __post_init__(self):
+        assert self.model_type in MODEL_TYPES
+        assert len(self.base_quality) == len(TASKS)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Router <-> node link (Eq. 5 terms)."""
+
+    bw_up_bps: float      # router -> node bandwidth B_{r->j}, bytes/s
+    bw_down_bps: float    # node -> router bandwidth B_{j->r}, bytes/s
+    latency_up_s: float   # latency_{r->j}
+    latency_down_s: float  # latency_{j->r}
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """One node with its deployed models and serving speeds."""
+
+    name: str
+    kind: str                         # 'cloud' | 'edge'
+    models: Tuple[str, ...]           # deployment map M(n_j)
+    link: LinkSpec
+    # serving speed per deployed model (tokens/s), keyed by model name
+    prefill_tps: Dict[str, float]
+    decode_tps: Dict[str, float]
+    concurrency: int = 4              # parallel execution slots (capacity C_j)
+
+    def __post_init__(self):
+        assert self.kind in ("cloud", "edge")
+        for m in self.models:
+            assert m in self.prefill_tps and m in self.decode_tps, m
+
+
+class ClusterArrays(NamedTuple):
+    """Flat jnp view of the (node, model) pair table for the JAX evaluator."""
+
+    # pairs (n_pairs,)
+    pair_node: jnp.ndarray            # int32 node index
+    pair_model: jnp.ndarray           # int32 model index (into global M)
+    pair_is_edge: jnp.ndarray         # bool
+    pair_model_type: jnp.ndarray      # int32 into MODEL_TYPES
+    pair_price: jnp.ndarray           # $ / Mtok
+    pair_prefill_tps: jnp.ndarray     # float32
+    pair_decode_tps: jnp.ndarray      # float32
+    pair_base_quality: jnp.ndarray    # (n_pairs, n_tasks)
+    pair_diff_slope: jnp.ndarray      # (n_pairs,)
+    pair_verbosity: jnp.ndarray       # (n_pairs,)
+    # nodes (n_nodes,)
+    node_is_edge: jnp.ndarray
+    node_bw_up: jnp.ndarray
+    node_bw_down: jnp.ndarray
+    node_lat_up: jnp.ndarray
+    node_lat_down: jnp.ndarray
+    node_conc: jnp.ndarray            # int32 capacity slots
+    # routing helper tables
+    # first-edge-pair by model type, ordered by node index: (n_types, n_edge)
+    edge_pairs_by_type: jnp.ndarray   # int32 pair idx, -1 padded
+    cloud_fallback_pair: jnp.ndarray  # int32 scalar: high-capacity cloud model
+
+    @property
+    def n_pairs(self) -> int:
+        return self.pair_node.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_is_edge.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    nodes: Tuple[NodeSpec, ...]
+    models: Tuple[ModelSpec, ...]
+
+    def model_index(self, name: str) -> int:
+        for i, m in enumerate(self.models):
+            if m.name == name:
+                return i
+        raise KeyError(name)
+
+    def pairs(self) -> List[Tuple[int, int]]:
+        """Enumerate the solution space S = {(node, model)} (paper §III)."""
+        out = []
+        for j, node in enumerate(self.nodes):
+            for mname in node.models:
+                out.append((j, self.model_index(mname)))
+        return out
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs())
+
+    def pair_index(self, node_name: str, model_name: str) -> int:
+        for p, (j, k) in enumerate(self.pairs()):
+            if self.nodes[j].name == node_name and self.models[k].name == model_name:
+                return p
+        raise KeyError((node_name, model_name))
+
+    def describe(self) -> str:
+        lines = [f"cluster: {len(self.nodes)} nodes, {len(self.models)} models, "
+                 f"{self.n_pairs} routable (node, model) pairs"]
+        for j, n in enumerate(self.nodes):
+            lines.append(f"  [{j}] {n.name} ({n.kind}, conc={n.concurrency}): "
+                         + ", ".join(n.models))
+        return "\n".join(lines)
+
+    # -- jnp view -----------------------------------------------------------
+    def to_arrays(self) -> ClusterArrays:
+        pairs = self.pairs()
+        n_pairs = len(pairs)
+        pair_node = np.zeros(n_pairs, np.int32)
+        pair_model = np.zeros(n_pairs, np.int32)
+        pair_is_edge = np.zeros(n_pairs, bool)
+        pair_model_type = np.zeros(n_pairs, np.int32)
+        pair_price = np.zeros(n_pairs, np.float32)
+        pair_prefill = np.zeros(n_pairs, np.float32)
+        pair_decode = np.zeros(n_pairs, np.float32)
+        pair_bq = np.zeros((n_pairs, len(TASKS)), np.float32)
+        pair_slope = np.zeros(n_pairs, np.float32)
+        pair_verb = np.zeros(n_pairs, np.float32)
+        for p, (j, k) in enumerate(pairs):
+            node, model = self.nodes[j], self.models[k]
+            pair_node[p] = j
+            pair_model[p] = k
+            pair_is_edge[p] = node.kind == "edge"
+            pair_model_type[p] = MODEL_TYPE_INDEX[model.model_type]
+            pair_price[p] = model.price_per_mtok
+            pair_prefill[p] = node.prefill_tps[model.name]
+            pair_decode[p] = node.decode_tps[model.name]
+            pair_bq[p] = model.base_quality
+            pair_slope[p] = model.difficulty_slope
+            pair_verb[p] = model.verbosity
+
+        n_nodes = len(self.nodes)
+        node_is_edge = np.array([n.kind == "edge" for n in self.nodes])
+        node_bw_up = np.array([n.link.bw_up_bps for n in self.nodes], np.float32)
+        node_bw_down = np.array([n.link.bw_down_bps for n in self.nodes], np.float32)
+        node_lat_up = np.array([n.link.latency_up_s for n in self.nodes], np.float32)
+        node_lat_down = np.array([n.link.latency_down_s for n in self.nodes], np.float32)
+        node_conc = np.array([n.concurrency for n in self.nodes], np.int32)
+
+        # routing helper: per model type, edge pairs ordered by node index
+        n_edge = int(node_is_edge.sum())
+        edge_by_type = -np.ones((len(MODEL_TYPES), max(n_edge, 1)), np.int32)
+        for t in range(len(MODEL_TYPES)):
+            col = 0
+            for p, (j, k) in enumerate(pairs):
+                if pair_is_edge[p] and pair_model_type[p] == t:
+                    edge_by_type[t, col] = p
+                    col += 1
+
+        # cloud fallback = largest-params model on a cloud node
+        cloud_pairs = [(p, self.models[k].params_b)
+                       for p, (j, k) in enumerate(pairs)
+                       if self.nodes[j].kind == "cloud"]
+        assert cloud_pairs, "cluster must contain at least one cloud pair"
+        fallback = max(cloud_pairs, key=lambda t: t[1])[0]
+
+        return ClusterArrays(
+            pair_node=jnp.asarray(pair_node),
+            pair_model=jnp.asarray(pair_model),
+            pair_is_edge=jnp.asarray(pair_is_edge),
+            pair_model_type=jnp.asarray(pair_model_type),
+            pair_price=jnp.asarray(pair_price),
+            pair_prefill_tps=jnp.asarray(pair_prefill),
+            pair_decode_tps=jnp.asarray(pair_decode),
+            pair_base_quality=jnp.asarray(pair_bq),
+            pair_diff_slope=jnp.asarray(pair_slope),
+            pair_verbosity=jnp.asarray(pair_verb),
+            node_is_edge=jnp.asarray(node_is_edge),
+            node_bw_up=jnp.asarray(node_bw_up),
+            node_bw_down=jnp.asarray(node_bw_down),
+            node_lat_up=jnp.asarray(node_lat_up),
+            node_lat_down=jnp.asarray(node_lat_down),
+            node_conc=jnp.asarray(node_conc),
+            edge_pairs_by_type=jnp.asarray(edge_by_type),
+            cloud_fallback_pair=jnp.asarray(fallback, dtype=jnp.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The paper's testbed (§V-C): 1 cloud node (A40, gemma3:27b) + 3 edge nodes
+# (4-core CPU, qwen2.5 1.5b instruct / coder / math). Speeds, prices and
+# quality constants are calibrated to Table II — see workload/calibration.py
+# for the calibration procedure and residuals.
+# ---------------------------------------------------------------------------
+
+def paper_models() -> Tuple[ModelSpec, ...]:
+    return (
+        ModelSpec(
+            name="gemma3:27b", model_type="general", params_b=27.0,
+            price_per_mtok=0.83,
+            #              mbpp   gsm8k  squad  hellaswag
+            base_quality=(0.650, 0.420, 0.905, 0.320),
+            difficulty_slope=0.08, verbosity=1.0),
+        ModelSpec(
+            name="qwen2.5:1.5b-instruct", model_type="instruct", params_b=1.5,
+            price_per_mtok=0.0665,
+            base_quality=(0.180, 0.140, 0.700, 0.200),
+            difficulty_slope=0.45, verbosity=0.9),
+        ModelSpec(
+            name="qwen2.5-coder:1.5b-instruct", model_type="coder", params_b=1.5,
+            price_per_mtok=0.0665,
+            base_quality=(0.480, 0.120, 0.450, 0.150),
+            difficulty_slope=0.45, verbosity=1.0),
+        ModelSpec(
+            name="qwen2.5-math:1.5b-instruct", model_type="math", params_b=1.5,
+            price_per_mtok=0.0665,
+            base_quality=(0.100, 0.330, 0.300, 0.120),
+            difficulty_slope=0.45, verbosity=1.1),
+    )
+
+
+def paper_testbed(edge_concurrency: int = 4, cloud_concurrency: int = 8
+                  ) -> ClusterSpec:
+    """§V-C: 3 edge nodes (4-core CPU, 8GB, no GPU) + 1 cloud node (A40)."""
+    models = paper_models()
+    edge_models = tuple(m.name for m in models[1:])
+    # LAN to edge (fast, near), WAN to cloud (slower, farther)
+    edge_link = LinkSpec(bw_up_bps=12.5e6, bw_down_bps=12.5e6,
+                         latency_up_s=0.004, latency_down_s=0.004)
+    cloud_link = LinkSpec(bw_up_bps=6.25e6, bw_down_bps=6.25e6,
+                          latency_up_s=0.035, latency_down_s=0.035)
+    # Ollama-style speeds: 27b on A40 GPU vs 1.5b on 4-core CPU
+    cloud_speeds_pre = {"gemma3:27b": 2200.0}
+    cloud_speeds_dec = {"gemma3:27b": 19.0}
+    edge_pre = {m: 300.0 for m in edge_models}
+    edge_dec = {m: 5.2 for m in edge_models}
+    nodes = (
+        NodeSpec(name="cloud-0", kind="cloud", models=("gemma3:27b",),
+                 link=cloud_link, prefill_tps=cloud_speeds_pre,
+                 decode_tps=cloud_speeds_dec, concurrency=cloud_concurrency),
+    ) + tuple(
+        NodeSpec(name=f"edge-{i}", kind="edge", models=edge_models,
+                 link=edge_link, prefill_tps=dict(edge_pre),
+                 decode_tps=dict(edge_dec), concurrency=edge_concurrency)
+        for i in range(3)
+    )
+    return ClusterSpec(nodes=nodes, models=models)

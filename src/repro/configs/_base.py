@@ -1,0 +1,41 @@
+"""Shared helpers for architecture config modules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCard:
+    """Registers an architecture as a routable model for the cluster layer.
+
+    decode_tps / prefill_tps are *per v5e-chip* roofline-derived estimates
+    (filled by benchmarks/roofline.py after the dry-run; the defaults here are
+    analytic 2·N_active/HBM-bw bounds). price is a Together.ai-style $/Mtok
+    proxy scaled by active parameters.
+    """
+    arch: str
+    params_b: float
+    active_params_b: float
+    model_type: str = "general"
+    price_per_mtok: float = 0.0
+    decode_tps: float = 0.0
+    prefill_tps: float = 0.0
+
+
+def make_card(name: str, cfg: ModelConfig, model_type: str = "general"
+              ) -> ModelCard:
+    counts = cfg.param_counts()
+    nb = counts["total"] / 1e9
+    na = counts["active"] / 1e9
+    # analytic single-chip bounds (819 GB/s HBM, bf16): decode is
+    # memory-bound at N_active bytes/token; prefill compute-bound at
+    # 197 TFLOP/s / 2·N_active.
+    decode_tps = 819e9 / max(2e9 * na, 1e6)
+    prefill_tps = 197e12 / max(2e9 * na, 1e6)
+    price = 0.06 + 0.09 * na  # $/Mtok, roughly Together.ai's size scaling
+    return ModelCard(arch=name, params_b=nb, active_params_b=na,
+                     model_type=model_type, price_per_mtok=price,
+                     decode_tps=decode_tps, prefill_tps=prefill_tps)

@@ -1,0 +1,15 @@
+"""The paper's contribution: NSGA-II multi-objective LLM request routing."""
+from .nsga2 import NSGA2, NSGA2Config, NSGA2State
+from .objectives import Objectives, aggregate, overall_scores
+from .pareto import (crowding_distance, dominance_matrix, hypervolume_2d,
+                     hypervolume_mc, non_dominated_sort, pareto_mask)
+from .policy import (BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS, THRESHOLD_NAMES,
+                     decide_pair_jnp, decide_pair_py)
+
+__all__ = [
+    "NSGA2", "NSGA2Config", "NSGA2State", "Objectives", "aggregate",
+    "overall_scores", "crowding_distance", "dominance_matrix",
+    "hypervolume_2d", "hypervolume_mc", "non_dominated_sort", "pareto_mask",
+    "decide_pair_jnp", "decide_pair_py", "THRESHOLD_NAMES", "BOUNDS_LO",
+    "BOUNDS_HI", "PAPER_DEFAULTS",
+]

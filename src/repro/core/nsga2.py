@@ -1,0 +1,299 @@
+"""NSGA-II (Deb et al. 2002) fully vectorized in JAX.
+
+This is the paper's §IV optimizer: a population of routing policies evolved
+with non-dominated sorting + crowding distance, binary tournament selection,
+crossover and mutation. Two genome encodings are supported, matching the two
+policy representations in the paper:
+
+* **continuous** (threshold genome, §IV-B.6): D decision variables in
+  ``[lo, hi]`` — SBX crossover + polynomial mutation. This is what the runtime
+  rule-based router consumes (θ_d,code, θ_d,math, θ_d,general, θ_q, θ_t,code,
+  θ_t,math).
+* **discrete** (direct assignment genome, §IV-B.1): one integer gene per
+  request selecting a (node, model) pair — uniform-swap crossover ("swapping
+  node-LLM pairs for a subset of requests") + random reassignment mutation.
+
+The whole generation step is a single jitted function; ``evolve`` runs a
+Python loop for logging, ``evolve_scan`` runs the entire optimization as one
+``lax.scan`` (used by the perf benchmarks).
+
+Constraints are handled with the standard constrained-domination trick folded
+into a penalty: the fitness function may return a violation vector alongside
+objectives; infeasible individuals get all objectives shifted by
+``violation * PENALTY`` which makes every feasible point dominate them while
+still ordering infeasible points by violation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .pareto import crowding_distance, non_dominated_sort
+
+PENALTY = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class NSGA2Config:
+    """Hyper-parameters (paper §V-A: P=100, T=100, pc=0.8, pm=0.1)."""
+
+    pop_size: int = 100
+    n_generations: int = 100
+    crossover_prob: float = 0.8
+    mutation_prob: float = 0.1
+    eta_crossover: float = 15.0
+    eta_mutation: float = 20.0
+    genome: str = "continuous"  # "continuous" | "discrete"
+    # continuous bounds (D,) arrays; discrete cardinality
+    lo: Optional[jnp.ndarray] = None
+    hi: Optional[jnp.ndarray] = None
+    n_choices: int = 0
+
+    def __post_init__(self):
+        assert self.pop_size % 2 == 0, "pop_size must be even"
+        assert self.genome in ("continuous", "discrete")
+
+
+class NSGA2State(NamedTuple):
+    genomes: jax.Array     # (P, D) float32 or int32
+    F: jax.Array           # (P, M) penalized objectives
+    F_raw: jax.Array       # (P, M) unpenalized objectives
+    violation: jax.Array   # (P,)
+    rank: jax.Array        # (P,)
+    crowd: jax.Array       # (P,)
+    key: jax.Array
+    generation: jax.Array  # scalar int32
+
+
+# FitnessFn: (genomes (P, D), key) -> (F (P, M), violation (P,))
+FitnessFn = Callable[[jax.Array, jax.Array], Tuple[jax.Array, jax.Array]]
+
+
+def _penalize(F: jax.Array, violation: jax.Array) -> jax.Array:
+    return F + (violation[:, None] > 0) * (PENALTY + violation[:, None] * PENALTY)
+
+
+# ---------------------------------------------------------------------------
+# Variation operators
+# ---------------------------------------------------------------------------
+
+def sbx_crossover(key: jax.Array, p1: jax.Array, p2: jax.Array,
+                  lo: jax.Array, hi: jax.Array, pc: float, eta: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Simulated binary crossover on (n_pairs, D) parent blocks."""
+    k_pair, k_gene, k_u = jax.random.split(key, 3)
+    n_pairs, D = p1.shape
+    u = jax.random.uniform(k_u, (n_pairs, D))
+    beta = jnp.where(
+        u <= 0.5,
+        (2.0 * u) ** (1.0 / (eta + 1.0)),
+        (1.0 / (2.0 * (1.0 - u))) ** (1.0 / (eta + 1.0)),
+    )
+    c1 = 0.5 * ((1.0 + beta) * p1 + (1.0 - beta) * p2)
+    c2 = 0.5 * ((1.0 - beta) * p1 + (1.0 + beta) * p2)
+    # per-gene 0.5 exchange, per-pair pc gate
+    do_pair = jax.random.uniform(k_pair, (n_pairs, 1)) < pc
+    do_gene = jax.random.uniform(k_gene, (n_pairs, D)) < 0.5
+    apply = do_pair & do_gene
+    c1 = jnp.where(apply, c1, p1)
+    c2 = jnp.where(apply, c2, p2)
+    return jnp.clip(c1, lo, hi), jnp.clip(c2, lo, hi)
+
+
+def polynomial_mutation(key: jax.Array, x: jax.Array, lo: jax.Array,
+                        hi: jax.Array, pm: float, eta: float) -> jax.Array:
+    """Polynomial mutation on (P, D)."""
+    k_gate, k_u = jax.random.split(key)
+    u = jax.random.uniform(k_u, x.shape)
+    delta = jnp.where(
+        u < 0.5,
+        (2.0 * u) ** (1.0 / (eta + 1.0)) - 1.0,
+        1.0 - (2.0 * (1.0 - u)) ** (1.0 / (eta + 1.0)),
+    )
+    mutated = x + delta * (hi - lo)
+    gate = jax.random.uniform(k_gate, x.shape) < pm
+    return jnp.clip(jnp.where(gate, mutated, x), lo, hi)
+
+
+def uniform_swap_crossover(key: jax.Array, p1: jax.Array, p2: jax.Array,
+                           pc: float) -> Tuple[jax.Array, jax.Array]:
+    """Paper §IV-B.4: swap node-LLM pairs for a subset of requests."""
+    k_pair, k_gene = jax.random.split(key)
+    n_pairs, D = p1.shape
+    do_pair = jax.random.uniform(k_pair, (n_pairs, 1)) < pc
+    swap = (jax.random.uniform(k_gene, (n_pairs, D)) < 0.5) & do_pair
+    c1 = jnp.where(swap, p2, p1)
+    c2 = jnp.where(swap, p1, p2)
+    return c1, c2
+
+
+def reassignment_mutation(key: jax.Array, x: jax.Array, pm: float,
+                          n_choices: int) -> jax.Array:
+    """Paper §IV-B.4: reassign a small fraction of requests to other pairs."""
+    k_gate, k_new = jax.random.split(key)
+    gate = jax.random.uniform(k_gate, x.shape) < pm
+    fresh = jax.random.randint(k_new, x.shape, 0, n_choices, dtype=x.dtype)
+    return jnp.where(gate, fresh, x)
+
+
+# ---------------------------------------------------------------------------
+# Selection / survival
+# ---------------------------------------------------------------------------
+
+def binary_tournament(key: jax.Array, rank: jax.Array, crowd: jax.Array,
+                      n: int) -> jax.Array:
+    """Return (n,) winner indices of n independent binary tournaments."""
+    P = rank.shape[0]
+    idx = jax.random.randint(key, (n, 2), 0, P)
+    a, b = idx[:, 0], idx[:, 1]
+    a_better = (rank[a] < rank[b]) | ((rank[a] == rank[b]) & (crowd[a] > crowd[b]))
+    return jnp.where(a_better, a, b)
+
+
+def survival_select(F: jax.Array, P: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Elitist (μ+λ) truncation: top-P of combined population by
+    (rank asc, crowding desc). Returns (indices, rank_sel, crowd_sel)."""
+    rank = non_dominated_sort(F)
+    crowd = crowding_distance(F, rank)
+    # lexsort: primary rank asc, secondary crowd desc. Replace inf for sort
+    # stability under -crowd (−inf sorts first which is what we want).
+    neg_crowd = jnp.where(jnp.isinf(crowd), -jnp.inf, -crowd)
+    order = jnp.lexsort((neg_crowd, rank))
+    sel = order[:P]
+    return sel, rank[sel], crowd[sel]
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class NSGA2:
+    """Vectorized NSGA-II engine.
+
+    Parameters
+    ----------
+    fitness_fn : FitnessFn
+        Maps (genomes, key) -> (objectives (P, M), violation (P,)). Must be
+        traceable (it is called under jit). Objectives are minimized.
+    config : NSGA2Config
+    init_fn : optional custom population initializer (key) -> (P, D) genomes.
+        Defaults to uniform in bounds / uniform categorical. The paper's
+        heuristic-biased init for direct genomes lives in core.fitness.
+    """
+
+    def __init__(self, fitness_fn: FitnessFn, config: NSGA2Config,
+                 init_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+                 use_pallas_dominance: bool = False):
+        self.fitness_fn = fitness_fn
+        self.config = config
+        self.init_fn = init_fn
+        self.use_pallas_dominance = use_pallas_dominance
+        self._step = jax.jit(self._step_impl)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: jax.Array) -> NSGA2State:
+        cfg = self.config
+        k_pop, k_fit, k_next = jax.random.split(key, 3)
+        if self.init_fn is not None:
+            genomes = self.init_fn(k_pop)
+        elif cfg.genome == "continuous":
+            D = cfg.lo.shape[0]
+            u = jax.random.uniform(k_pop, (cfg.pop_size, D))
+            genomes = cfg.lo + u * (cfg.hi - cfg.lo)
+        else:
+            if cfg.n_choices <= 0:
+                raise ValueError("discrete genome requires init_fn or n_choices>0")
+            genomes = jax.random.randint(
+                k_pop, (cfg.pop_size, 1), 0, cfg.n_choices, dtype=jnp.int32)
+        F_raw, violation = self.fitness_fn(genomes, k_fit)
+        F = _penalize(F_raw, violation)
+        rank = non_dominated_sort(F)
+        crowd = crowding_distance(F, rank)
+        return NSGA2State(genomes, F, F_raw, violation, rank, crowd, k_next,
+                          jnp.int32(0))
+
+    # -- one generation -------------------------------------------------------
+    def _step_impl(self, state: NSGA2State) -> NSGA2State:
+        cfg = self.config
+        P = cfg.pop_size
+        key, k_sel, k_cx, k_mut, k_fit = jax.random.split(state.key, 5)
+
+        parents = binary_tournament(k_sel, state.rank, state.crowd, P)
+        pg = state.genomes[parents]
+        p1, p2 = pg[0::2], pg[1::2]
+
+        if cfg.genome == "continuous":
+            c1, c2 = sbx_crossover(k_cx, p1, p2, cfg.lo, cfg.hi,
+                                   cfg.crossover_prob, cfg.eta_crossover)
+            offspring = jnp.concatenate([c1, c2], axis=0)
+            offspring = polynomial_mutation(k_mut, offspring, cfg.lo, cfg.hi,
+                                            cfg.mutation_prob, cfg.eta_mutation)
+        else:
+            c1, c2 = uniform_swap_crossover(k_cx, p1, p2, cfg.crossover_prob)
+            offspring = jnp.concatenate([c1, c2], axis=0)
+            offspring = reassignment_mutation(k_mut, offspring,
+                                              cfg.mutation_prob, cfg.n_choices)
+
+        F_off_raw, viol_off = self.fitness_fn(offspring, k_fit)
+        F_off = _penalize(F_off_raw, viol_off)
+
+        # (μ+λ) combine + survival
+        genomes_all = jnp.concatenate([state.genomes, offspring], axis=0)
+        F_all = jnp.concatenate([state.F, F_off], axis=0)
+        F_raw_all = jnp.concatenate([state.F_raw, F_off_raw], axis=0)
+        viol_all = jnp.concatenate([state.violation, viol_off], axis=0)
+        sel, rank_sel, crowd_sel = survival_select(F_all, P)
+
+        return NSGA2State(
+            genomes=genomes_all[sel], F=F_all[sel], F_raw=F_raw_all[sel],
+            violation=viol_all[sel], rank=rank_sel, crowd=crowd_sel, key=key,
+            generation=state.generation + 1)
+
+    # -- drivers --------------------------------------------------------------
+    def evolve(self, key: jax.Array, n_generations: Optional[int] = None,
+               callback: Optional[Callable[[NSGA2State], None]] = None
+               ) -> NSGA2State:
+        """Python-loop driver (allows host callbacks for logging)."""
+        state = self.init(key)
+        T = n_generations if n_generations is not None else self.config.n_generations
+        for _ in range(T):
+            state = self._step(state)
+            if callback is not None:
+                callback(state)
+        return state
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def evolve_scan(self, key: jax.Array, n_generations: int) -> NSGA2State:
+        """Entire run as one lax.scan — used by the perf benchmark."""
+        state = self.init(key)
+
+        def body(s, _):
+            return self._step_impl(s), None
+
+        state, _ = jax.lax.scan(body, state, None, length=n_generations)
+        return state
+
+    # -- results --------------------------------------------------------------
+    def pareto_front(self, state: NSGA2State) -> Tuple[jax.Array, jax.Array]:
+        """Feasible rank-0 members: (genomes, raw objectives)."""
+        mask = (state.rank == 0) & (state.violation <= 0)
+        return state.genomes[mask], state.F_raw[mask]
+
+    def select_by_weights(self, state: NSGA2State, weights: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+        """Pick one policy from the front by the paper's Eq. (1) weighted sum
+        over min-max normalized objectives (ω1 RQ + ω2 C + ω3 RT)."""
+        F = state.F_raw
+        fmin = jnp.min(F, axis=0)
+        fmax = jnp.max(F, axis=0)
+        Fn = (F - fmin) / jnp.where(fmax - fmin <= 0, 1.0, fmax - fmin)
+        score = Fn @ weights
+        # mask non-front/infeasible
+        bad = (state.rank != 0) | (state.violation > 0)
+        score = jnp.where(bad, jnp.inf, score)
+        i = jnp.argmin(score)
+        return state.genomes[i], F[i]

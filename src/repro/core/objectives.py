@@ -1,0 +1,50 @@
+"""Objective metrics (paper Eqs. 2–5) and the §V-D composite score.
+
+All metrics are computed from per-request vectors produced by the evaluator:
+``q`` (quality score in [0,1]), ``cost`` ($ per request), ``rt`` (seconds).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Objectives(NamedTuple):
+    RQ: jnp.ndarray   # Eq. 2: mean(1 - q)  (minimize)
+    C: jnp.ndarray    # Eq. 3: mean cost    (minimize)
+    RT: jnp.ndarray   # Eq. 4: mean latency (minimize)
+
+    def stack(self) -> jnp.ndarray:
+        return jnp.stack([self.RQ, self.C, self.RT])
+
+
+def aggregate(q: jnp.ndarray, cost: jnp.ndarray, rt: jnp.ndarray) -> Objectives:
+    return Objectives(RQ=jnp.mean(1.0 - q), C=jnp.mean(cost), RT=jnp.mean(rt))
+
+
+def weighted_scalar(obj: Objectives, weights: Sequence[float],
+                    norm_lo: Sequence[float], norm_hi: Sequence[float]
+                    ) -> jnp.ndarray:
+    """Paper Eq. (1): min ω1·RQ + ω2·C + ω3·RT over min-max normalized terms."""
+    f = obj.stack()
+    lo = jnp.asarray(norm_lo)
+    hi = jnp.asarray(norm_hi)
+    fn = (f - lo) / jnp.where(hi - lo <= 0, 1.0, hi - lo)
+    return jnp.dot(jnp.asarray(weights), fn)
+
+
+def overall_scores(avg_quality: np.ndarray, avg_rt: np.ndarray,
+                   avg_cost: np.ndarray) -> np.ndarray:
+    """§V-D composite: min-max normalize each dimension across the compared
+    strategies (larger = better), then average the three normalized scores."""
+    q, t, c = map(np.asarray, (avg_quality, avg_rt, avg_cost))
+
+    def _norm(x, larger_better):
+        rng = x.max() - x.min()
+        if rng <= 0:
+            return np.ones_like(x)
+        return (x - x.min()) / rng if larger_better else (x.max() - x) / rng
+
+    return (_norm(q, True) + _norm(t, False) + _norm(c, False)) / 3.0

@@ -1,0 +1,159 @@
+"""Pareto utilities for NSGA-II, fully vectorized in JAX.
+
+All functions operate on an objective matrix ``F`` of shape (P, M) where P is
+the population size and M the number of objectives, **minimization** convention
+throughout (the paper minimizes RQ, C, RT — Eq. (1)).
+
+These are the jit-friendly building blocks used by :mod:`repro.core.nsga2`;
+:mod:`repro.kernels.dominance` provides a Pallas TPU kernel for the dominance
+matrix with identical semantics (tested against :func:`dominance_matrix`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dominance_matrix",
+    "non_dominated_sort",
+    "crowding_distance",
+    "pareto_mask",
+    "hypervolume_2d",
+    "hypervolume_mc",
+]
+
+
+def dominance_matrix(F: jax.Array) -> jax.Array:
+    """Boolean (P, P) matrix D with D[i, j] = True iff i dominates j.
+
+    i dominates j when i is <= j in every objective and < in at least one.
+    """
+    # (P, 1, M) vs (1, P, M)
+    le = jnp.all(F[:, None, :] <= F[None, :, :], axis=-1)
+    lt = jnp.any(F[:, None, :] < F[None, :, :], axis=-1)
+    return le & lt
+
+
+def pareto_mask(F: jax.Array) -> jax.Array:
+    """(P,) bool mask of non-dominated rows of F."""
+    dom = dominance_matrix(F)
+    return ~jnp.any(dom, axis=0)
+
+
+def non_dominated_sort(F: jax.Array) -> jax.Array:
+    """Return (P,) int32 front ranks (0 = best / non-dominated front).
+
+    Iterative front peeling: repeatedly take the set of individuals with no
+    remaining dominator, assign them the current rank, remove them. Runs a
+    fixed P-iteration ``lax.while_loop`` upper bound (each iteration peels at
+    least one individual) so it stays jittable with static shapes.
+    """
+    P = F.shape[0]
+    dom = dominance_matrix(F)  # dom[i, j]: i dominates j
+
+    def cond(state):
+        rank, _, k = state
+        return jnp.any(rank < 0) & (k < P)
+
+    def body(state):
+        rank, dom_cnt, k = state
+        unranked = rank < 0
+        # current front: unranked with zero unranked dominators
+        front = unranked & (dom_cnt == 0)
+        rank = jnp.where(front, k, rank)
+        # remove this front's dominance contributions
+        dec = jnp.sum(dom & front[:, None], axis=0)
+        dom_cnt = jnp.where(unranked, dom_cnt - dec, dom_cnt)
+        # peeled individuals get a sentinel count so they never re-enter
+        dom_cnt = jnp.where(front, jnp.iinfo(jnp.int32).max, dom_cnt)
+        return rank, dom_cnt, k + 1
+
+    rank0 = jnp.full((P,), -1, dtype=jnp.int32)
+    cnt0 = jnp.sum(dom, axis=0).astype(jnp.int32)
+    rank, _, _ = jax.lax.while_loop(cond, body, (rank0, cnt0, jnp.int32(0)))
+    # Safety: anything still unranked (cannot happen mathematically) -> last.
+    return jnp.where(rank < 0, P - 1, rank).astype(jnp.int32)
+
+
+def crowding_distance(F: jax.Array, rank: jax.Array) -> jax.Array:
+    """Crowding distance per individual, computed within its own front.
+
+    Boundary solutions of each front get +inf. Distances are normalized per
+    objective by the front's objective range (NSGA-II, Deb et al. 2002).
+    """
+    P, M = F.shape
+    INF = jnp.inf
+
+    def per_objective(f_m):
+        # Sort whole population by (rank, objective) so that individuals of
+        # the same front are contiguous and ordered by this objective.
+        order = jnp.lexsort((f_m, rank))  # primary: rank, secondary: f_m
+        f_sorted = f_m[order]
+        r_sorted = rank[order]
+        # neighbors within the same front
+        prev_same = jnp.concatenate([jnp.array([False]), r_sorted[1:] == r_sorted[:-1]])
+        next_same = jnp.concatenate([r_sorted[:-1] == r_sorted[1:], jnp.array([False])])
+        f_prev = jnp.concatenate([f_sorted[:1], f_sorted[:-1]])
+        f_next = jnp.concatenate([f_sorted[1:], f_sorted[-1:]])
+        gap = jnp.where(prev_same & next_same, f_next - f_prev, INF)
+        # normalize by front range: front min/max via segment ops
+        # boundary (first/last of front in this objective) -> INF
+        # compute range per front using segment min/max over rank ids
+        fmin = jax.ops.segment_min(f_sorted, r_sorted, num_segments=P)
+        fmax = jax.ops.segment_max(f_sorted, r_sorted, num_segments=P)
+        rng = (fmax - fmin)[r_sorted]
+        rng = jnp.where(rng <= 0, 1.0, rng)
+        contrib = jnp.where(jnp.isinf(gap), INF, gap / rng)
+        # scatter back to original order
+        out = jnp.zeros_like(f_m).at[order].set(contrib)
+        return out
+
+    dists = jax.vmap(per_objective, in_axes=1, out_axes=1)(F.astype(jnp.float32))
+    return jnp.sum(dists, axis=1)  # inf + finite = inf, as desired
+
+
+def hypervolume_2d(F: jax.Array, ref: jax.Array) -> jax.Array:
+    """Exact hypervolume for M=2 minimization problems w.r.t. ``ref``.
+
+    Dominated or out-of-reference points contribute zero.
+    """
+    # Keep only points that are <= ref in both objectives; others clamp to ref
+    Fc = jnp.minimum(F, ref[None, :])
+    # sort by first objective ascending
+    order = jnp.argsort(Fc[:, 0])
+    x = Fc[order, 0]
+    y = Fc[order, 1]
+    # running minimum of y defines the staircase
+    y_min = jax.lax.associative_scan(jnp.minimum, y)
+    # width of each step: next x (or ref) minus current x, but only where this
+    # point improves the staircase (y < prior running min)
+    y_prev = jnp.concatenate([ref[1:2], y_min[:-1]])
+    height = jnp.maximum(y_prev - jnp.minimum(y, y_prev), 0.0)
+    x_next = jnp.concatenate([x[1:], ref[0:1]])
+    width = jnp.maximum(x_next - x, 0.0)
+    # staircase area: sum over points of width * (ref1 - staircase height)...
+    # simpler: area = sum_i width_i * (ref[1] - y_min_i)
+    area = jnp.sum(width * jnp.maximum(ref[1] - y_min, 0.0))
+    del height
+    return area
+
+
+@functools.partial(jax.jit, static_argnames=("n_samples",))
+def hypervolume_mc(F: jax.Array, ref: jax.Array, ideal: jax.Array, key: jax.Array,
+                   n_samples: int = 8192) -> jax.Array:
+    """Monte-Carlo hypervolume estimate for arbitrary M (minimization).
+
+    Samples uniformly in the [ideal, ref] box and counts the dominated
+    fraction. Used for convergence tracking of the 3-objective (RQ, C, RT)
+    router optimization, where exact HV is O(P log P) per slice but MC is
+    simpler and cheap under jit.
+    """
+    M = F.shape[1]
+    u = jax.random.uniform(key, (n_samples, M))
+    pts = ideal[None, :] + u * (ref - ideal)[None, :]
+    # point p is dominated by front member f if f <= p in all objectives
+    dominated = jnp.any(jnp.all(F[None, :, :] <= pts[:, None, :], axis=-1), axis=1)
+    box = jnp.prod(ref - ideal)
+    return jnp.mean(dominated.astype(jnp.float32)) * box

@@ -1,0 +1,134 @@
+"""Runtime request router (paper §IV-B.6, "Routing Policy Execution").
+
+Executes a policy π* selected from the NSGA-II Pareto set. The hot path is
+``route()``: feature lookup + Algorithm 2 threshold rules — microseconds per
+decision (the paper claims "millisecond-level routing decisions"; our
+benchmark measures it). Beyond the paper (its §VI future work), the router is
+fault-aware:
+
+* **failover** — unhealthy nodes are masked from the candidate set; if the
+  chosen node is down the request falls back to the cloud pair, or any
+  healthy pair as last resort;
+* **hedging** — the scheduler may ask for a *backup* pair to duplicate a
+  straggling request onto (different node than the primary);
+* **re-optimization** — ``maybe_reoptimize`` re-runs a small NSGA-II against
+  the latest observed trace window, implementing the paper's "small-scale
+  NSGA-II re-optimization triggered periodically".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..cluster.monitor import ClusterMonitor
+from ..cluster.spec import ClusterArrays, ClusterSpec
+from ..workload.classifier import classify
+from ..workload.datasets import Request
+from ..workload.features import complexity_score
+from .policy import decide_pair_py
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    pair: int
+    node: int
+    model: int
+    go_edge: bool
+    features: Tuple[float, int, float]   # (c_i, t_i, p_t)
+    backup_pair: Optional[int] = None
+
+
+class RequestRouter:
+    def __init__(self, cluster: ClusterSpec, thresholds: Sequence[float],
+                 monitor: Optional[ClusterMonitor] = None,
+                 hedge_factor: float = 3.0):
+        self.cluster = cluster
+        self.arrays: ClusterArrays = cluster.to_arrays()
+        self.thresholds = np.asarray(thresholds, np.float32)
+        self.monitor = monitor or ClusterMonitor(len(cluster.nodes))
+        self.hedge_factor = hedge_factor
+        self._rng = np.random.default_rng(0)
+        self._pair_node = np.asarray(self.arrays.pair_node)
+        self._pair_is_edge = np.asarray(self.arrays.pair_is_edge)
+        self._history: list = []   # (features, realized objectives) window
+
+    # -- hot path -------------------------------------------------------------
+    def route(self, req: Request, want_backup: bool = False) -> RouteDecision:
+        pred_cat, conf = classify(req, self._rng)
+        c_i = complexity_score(req, pred_cat)
+        queue = self.monitor.queue_lengths()
+        healthy = self.monitor.healthy_mask()
+
+        # mask unhealthy nodes by making their queues look infinite
+        masked_queue = [q if healthy[j] else 10 ** 6
+                        for j, q in enumerate(queue)]
+
+        pair = decide_pair_py(self.thresholds, complexity=c_i,
+                              pred_category=pred_cat, pred_conf=conf,
+                              queue_len=masked_queue, arrays=self.arrays)
+        node = int(self._pair_node[pair])
+
+        # failover: if Algorithm 2 returned a pair on a dead node (e.g. the
+        # cloud fallback itself is down), pick any healthy pair
+        if not healthy[node]:
+            alive = [p for p in range(len(self._pair_node))
+                     if healthy[self._pair_node[p]]]
+            if not alive:
+                raise RuntimeError("no healthy nodes in cluster")
+            # prefer healthy cloud, then least-loaded healthy edge
+            cloud_alive = [p for p in alive if not self._pair_is_edge[p]]
+            pair = (cloud_alive[0] if cloud_alive else
+                    min(alive, key=lambda p: queue[self._pair_node[p]]))
+            node = int(self._pair_node[pair])
+
+        backup = None
+        if want_backup:
+            backup = self.backup_pair(pair)
+        return RouteDecision(
+            pair=int(pair), node=node,
+            model=int(np.asarray(self.arrays.pair_model)[pair]),
+            go_edge=bool(self._pair_is_edge[pair]),
+            features=(c_i, pred_cat, conf), backup_pair=backup)
+
+    def backup_pair(self, primary: int) -> Optional[int]:
+        """A healthy pair on a *different* node, for hedged duplicates."""
+        healthy = self.monitor.healthy_mask()
+        pnode = int(self._pair_node[primary])
+        cands = [p for p in range(len(self._pair_node))
+                 if int(self._pair_node[p]) != pnode
+                 and healthy[self._pair_node[p]]]
+        if not cands:
+            return None
+        # cheapest viable alternative: cloud if primary was edge, else the
+        # least-loaded edge instruct pair
+        queue = self.monitor.queue_lengths()
+        return min(cands, key=lambda p: (queue[self._pair_node[p]],
+                                         self._pair_is_edge[p]))
+
+    # -- feedback & re-optimization --------------------------------------------
+    def record(self, decision: RouteDecision, quality: float, cost: float,
+               rt: float) -> None:
+        self._history.append((decision.features, decision.pair,
+                              (quality, cost, rt)))
+        if len(self._history) > 10000:
+            self._history = self._history[-5000:]
+
+    def maybe_reoptimize(self, trace, evaluator, generations: int = 20,
+                         pop_size: int = 32,
+                         weights: Sequence[float] = (1 / 3, 1 / 3, 1 / 3),
+                         seed: int = 0) -> np.ndarray:
+        """Small-scale periodic re-optimization (paper §IV-B.6)."""
+        from .nsga2 import NSGA2, NSGA2Config
+        from .policy import BOUNDS_HI, BOUNDS_LO
+        cfg = NSGA2Config(pop_size=pop_size, n_generations=generations,
+                          lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
+        opt = NSGA2(evaluator.make_fitness("continuous"), cfg)
+        state = opt.evolve_scan(jax.random.key(seed), generations)
+        genome, _ = opt.select_by_weights(state, jnp.asarray(weights))
+        self.thresholds = np.asarray(genome, np.float32)
+        return self.thresholds

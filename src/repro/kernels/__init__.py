@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper's own contribution is control-plane (routing), but the serving
+substrate it routes onto has three kernel-level hot spots we optimize for
+TPU: the NSGA-II dominance matrix (VPU/bandwidth), prefill flash attention
+(MXU), and GQA decode attention over long KV caches (HBM-bandwidth).
+All validated against the jnp oracles in ref.py via interpret mode on CPU.
+
+Public API lives in :mod:`repro.kernels.ops` (backend-dispatching wrappers);
+kernel modules keep their own names (flash_attention.py, decode_attention.py,
+dominance.py) and are intentionally *not* re-exported here to avoid
+function/submodule name shadowing.
+"""
+from . import ops, ref  # noqa: F401
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blocked Pareto-dominance matrix for NSGA-II.
+
+The O(P²·M) all-pairs comparison is the non-dominated-sort hot spot at large
+population sizes (P ≥ 4k when the router is re-optimized over long traces
+with direct-assignment genomes). The MXU offers nothing for boolean
+domination, so this is a **VPU/bandwidth kernel**: each grid cell loads two
+objective slabs — F_i (BI, M) and F_j (BJ, M) — into VMEM and writes one
+(BI, BJ) int8 tile of the dominance matrix.
+
+TPU adaptation notes (vs a CUDA port):
+* tiles are (128, 128) to match the VPU lane layout (8×128 vregs; the BI
+  dimension vectorizes over sublanes, BJ over lanes);
+* the M objective axis (≤ 8 in practice) stays resident: both slabs together
+  occupy 2·128·M·4 B ≤ 8 KiB — far under VMEM, so the kernel is bound by the
+  (BI·BJ) output-tile write, exactly what a roofline for a boolean all-pairs
+  op predicts;
+* output is int8 (0/1): TPU stores would waste 4× on an int32 mask and bool
+  stores pack awkwardly across lanes.
+
+``dominance_counts_kernel`` fuses the column reduction (dominator counts used
+by front peeling) so the P×P matrix never hits HBM: grid is (j_blocks,
+i_blocks) with i innermost, accumulating counts into the same (BJ,) output
+block across i steps — the standard Pallas revisiting-output accumulation
+pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _dominance_tile_kernel(fi_ref, fj_ref, out_ref):
+    """One (BI, BJ) tile: D[i, j] = all(Fi <= Fj) & any(Fi < Fj)."""
+    fi = fi_ref[...].astype(jnp.float32)          # (BI, M)
+    fj = fj_ref[...].astype(jnp.float32)          # (BJ, M)
+    le = jnp.all(fi[:, None, :] <= fj[None, :, :], axis=-1)
+    lt = jnp.any(fi[:, None, :] < fj[None, :, :], axis=-1)
+    out_ref[...] = (le & lt).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dominance_matrix_pallas(F: jax.Array, *, block: int = DEFAULT_BLOCK,
+                            interpret: bool = False) -> jax.Array:
+    """(P, M) -> (P, P) int8 dominance matrix. P padded to ``block``."""
+    P, M = F.shape
+    Pp = ((P + block - 1) // block) * block
+    # +inf padding: a padded row never dominates (le fails vs any real row on
+    # all objectives? no — +inf <= +inf) ... pad with +inf and slice: padded
+    # rows may relate to each other but the (P, P) slice is unaffected because
+    # +inf rows dominate no real row (inf <= x is false) and real rows'
+    # domination of padded columns lands outside the slice.
+    Fp = jnp.pad(F.astype(jnp.float32), ((0, Pp - P), (0, 0)),
+                 constant_values=jnp.inf)
+    grid = (Pp // block, Pp // block)
+    out = pl.pallas_call(
+        _dominance_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, M), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, M), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Pp, Pp), jnp.int8),
+        interpret=interpret,
+    )(Fp, Fp)
+    return out[:P, :P]
+
+
+def _dominance_counts_kernel(fj_ref, fi_ref, out_ref):
+    """Accumulate dominator counts for one (BJ,) column block over i steps."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fi = fi_ref[...].astype(jnp.float32)          # (BI, M) dominators
+    fj = fj_ref[...].astype(jnp.float32)          # (BJ, M) dominated
+    le = jnp.all(fi[:, None, :] <= fj[None, :, :], axis=-1)
+    lt = jnp.any(fi[:, None, :] < fj[None, :, :], axis=-1)
+    out_ref[...] += jnp.sum((le & lt).astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dominance_counts_pallas(F: jax.Array, *, block: int = DEFAULT_BLOCK,
+                            interpret: bool = False) -> jax.Array:
+    """(P, M) -> (P,) int32 dominator counts, P×P matrix never materialized."""
+    P, M = F.shape
+    Pp = ((P + block - 1) // block) * block
+    Fp = jnp.pad(F.astype(jnp.float32), ((0, Pp - P), (0, 0)),
+                 constant_values=jnp.inf)
+    nb = Pp // block
+    out = pl.pallas_call(
+        _dominance_counts_kernel,
+        grid=(nb, nb),          # (j, i) with i innermost -> accumulation
+        in_specs=[
+            pl.BlockSpec((block, M), lambda j, i: (j, 0)),
+            pl.BlockSpec((block, M), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.int32),
+        interpret=interpret,
+    )(Fp, Fp)
+    return out[:P]

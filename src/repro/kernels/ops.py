@@ -1,0 +1,72 @@
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas kernels run natively; elsewhere (this CPU container, tests)
+they run through ``interpret=True`` or fall back to the jnp reference —
+controlled by ``mode``:
+
+* "auto"      — Pallas on TPU, reference otherwise (the model zoo default,
+                 so dry-runs lower the XLA path and real TPUs get kernels);
+* "pallas"    — force the kernel (native);
+* "interpret" — force the kernel in interpret mode (kernel-correctness tests);
+* "ref"       — force the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import dominance as _dom
+from . import flash_attention as _fa
+from . import ref
+
+_MODES = ("auto", "pallas", "interpret", "ref")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> str:
+    assert mode in _MODES, mode
+    if mode == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return mode
+
+
+def dominance_matrix(F: jax.Array, mode: str = "auto") -> jax.Array:
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.dominance_matrix(F)
+    out = _dom.dominance_matrix_pallas(F, interpret=(m == "interpret"))
+    return out.astype(bool)
+
+
+def dominance_counts(F: jax.Array, mode: str = "auto") -> jax.Array:
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.dominance_counts(F)
+    return _dom.dominance_counts_pallas(F, interpret=(m == "interpret"))
+
+
+def flash_attention(q, k, v, causal: bool = True, mode: str = "auto",
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K) -> jax.Array:
+    m = _resolve(mode)
+    S = q.shape[2]
+    if m == "ref" or S % min(block_q, S) or S % min(block_k, S):
+        return ref.mha_prefill(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=(m == "interpret"))
+
+
+def gqa_decode_attention(q, k_cache, v_cache, kv_len, mode: str = "auto",
+                         block_k: int = _dec.DEFAULT_BLOCK_K) -> jax.Array:
+    m = _resolve(mode)
+    Smax = k_cache.shape[2]
+    if m == "ref" or Smax % min(block_k, Smax):
+        return ref.gqa_decode(q, k_cache, v_cache, kv_len)
+    return _dec.gqa_decode_attention(q, k_cache, v_cache, kv_len,
+                                     block_k=block_k,
+                                     interpret=(m == "interpret"))

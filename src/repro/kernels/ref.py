@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here. They are also the execution
+path used on non-TPU backends (the dry-run lowers the models with these, so
+roofline FLOPs/bytes come from XLA's un-fused reference implementation —
+conservative for the kernels' benefit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II Pareto dominance
+# ---------------------------------------------------------------------------
+
+def dominance_matrix(F: jax.Array) -> jax.Array:
+    """(P, M) objectives -> (P, P) bool, D[i, j] = i dominates j (minimize)."""
+    le = jnp.all(F[:, None, :] <= F[None, :, :], axis=-1)
+    lt = jnp.any(F[:, None, :] < F[None, :, :], axis=-1)
+    return le & lt
+
+
+def dominance_counts(F: jax.Array) -> jax.Array:
+    """(P,) int32: number of individuals dominating each column j."""
+    return jnp.sum(dominance_matrix(F), axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def mha_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Grouped-query attention, full materialized reference.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    Returns (B, Hq, S, D) in q.dtype; math in f32.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+    return out.astype(q.dtype)
+
+
+def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               kv_len: jax.Array, scale: float | None = None) -> jax.Array:
+    """Single-token decode attention over a (possibly padded) KV cache.
+
+    q: (B, Hq, D); k_cache, v_cache: (B, Hkv, Smax, D); kv_len: (B,) valid
+    prefix lengths. Positions >= kv_len are masked. Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    from ..models.sharding import accum_dot
+    qf = q.reshape(B, Hkv, group, D)
+    # no input casts under lowering: a .astype(f32) on the cache would
+    # materialize a full-size f32 copy (2x HBM)
+    scores = accum_dot("bhgd,bhsd->bhgs", qf, k_cache) * scale
+    pos = jnp.arange(Smax)[None, None, None, :]
+    mask = pos < kv_len[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = accum_dot("bhgs,bhsd->bhgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Serving launcher: the paper's cloud-edge cluster with real (reduced)
+models on this host, NSGA-II-optimized routing, continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 \
+        [--optimize-router] [--fail-node 1 --fail-at 5]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..cluster.spec import paper_testbed
+from ..configs import get
+from ..core.fitness import EvalConfig, TraceEvaluator
+from ..core.nsga2 import NSGA2, NSGA2Config
+from ..core.policy import BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS
+from ..models import lm
+from ..serving import ClusterServer, EngineConfig, ServeRequest
+from ..workload.trace import build_trace
+
+
+def build_models():
+    big = get("stablelm-3b").smoke()
+    small = get("qwen3-1.7b").smoke()
+    pb = lm.init(jax.random.key(0), big)
+    ps = lm.init(jax.random.key(1), small)
+    return {"gemma3:27b": (big, pb),
+            "qwen2.5:1.5b-instruct": (small, ps),
+            "qwen2.5-coder:1.5b-instruct": (small, ps),
+            "qwen2.5-math:1.5b-instruct": (small, ps)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--optimize-router", action="store_true")
+    ap.add_argument("--generations", type=int, default=30)
+    ap.add_argument("--fail-node", type=int, default=None)
+    ap.add_argument("--fail-at", type=int, default=5)
+    ap.add_argument("--max-new-tokens", type=int, default=4)
+    args = ap.parse_args()
+
+    cluster = paper_testbed()
+    trace = build_trace(max(args.requests, 64), seed=0)
+
+    thresholds = PAPER_DEFAULTS
+    if args.optimize_router:
+        print("optimizing router thresholds with NSGA-II ...")
+        ev = TraceEvaluator(trace, cluster, EvalConfig(concurrency=4))
+        cfg = NSGA2Config(pop_size=48, n_generations=args.generations,
+                          lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
+        opt = NSGA2(ev.make_fitness("continuous"), cfg)
+        state = opt.evolve_scan(jax.random.key(0), args.generations)
+        thresholds, F = opt.select_by_weights(
+            state, jnp.array([1 / 3, 1 / 3, 1 / 3]))
+        print("selected thresholds:", [round(float(x), 3) for x in thresholds],
+              "objectives (RQ, C, RT):", [float(x) for x in F])
+
+    print("building cluster server (4 nodes, 10 routable pairs) ...")
+    srv = ClusterServer(cluster, build_models(), thresholds,
+                        EngineConfig(max_slots=2, max_seq=48,
+                                     max_new_tokens=args.max_new_tokens))
+    t0 = time.time()
+    for i, r in enumerate(trace.requests[:args.requests]):
+        srv.submit(ServeRequest(request_id=i, req=r,
+                                max_new_tokens=args.max_new_tokens))
+        if args.fail_node is not None and i == args.fail_at:
+            print(f"!! injecting failure of node {args.fail_node}")
+            srv.fail_node(args.fail_node)
+    done = srv.run()
+    dt = time.time() - t0
+    print(f"served {len(done)} requests in {dt:.2f}s "
+          f"({len(done) / dt:.1f} req/s on CPU)")
+    print("stats:", srv.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --smoke --steps 50 --checkpoint-dir /tmp/ck
+
+``--smoke`` runs the reduced config on local devices (this container);
+without it the full config is used — on real hardware you would launch one
+process per host (jax.distributed.initialize) against the production mesh
+from launch.mesh. ``--dry-run`` AOT-compiles the train step instead of
+executing (see launch.dryrun for the full sweep tooling).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import all_ids, get
+from ..training.optim import OptConfig
+from ..training.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_ids())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default=None,
+                    choices=[None, "adamw", "adamw8bit", "adafactor"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    mod = get(args.arch)
+    cfg = mod.smoke() if args.smoke else mod.config()
+    print(f"arch={cfg.name} params={cfg.param_counts()['total'] / 1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    tcfg = TrainConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        microbatches=args.microbatches, steps=args.steps,
+        optimizer=args.optimizer, opt=OptConfig(lr=args.lr),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+    trainer = Trainer(cfg, tcfg)
+    _, _, hist = trainer.run(
+        resume=not args.no_resume,
+        callback=lambda step, m: print(
+            f"step {step:5d} loss {m['loss']:.4f} nll {m['nll']:.4f} "
+            f"gnorm {m['gnorm']:.3f} tok/s {m['tokens_per_s']:.0f}",
+            flush=True))
+    print("final:", hist[-1])
+
+
+if __name__ == "__main__":
+    main()

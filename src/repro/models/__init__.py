@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as one pattern-configured LM."""
+from . import lm
+from .config import SHAPES, ModelConfig, ShapeCell, cell_applicable
+
+__all__ = ["lm", "ModelConfig", "SHAPES", "ShapeCell", "cell_applicable"]

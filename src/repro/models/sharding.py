@@ -1,0 +1,299 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs per (arch × mode).
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+DP axis = ('pod', 'data') when the pod axis exists (pure data parallelism
+across pods — only gradient all-reduce crosses pod links).
+
+Training (2-D sharding, MaxText-style):
+  * column-parallel weights (d_in, d_out): P('data', 'model') — TP over the
+    output features, FSDP (ZeRO-3) over the input features;
+  * row-parallel weights: P('model', 'data');
+  * MoE experts (E, d, ff): P('model', 'data', None) — expert parallelism on
+    the TP axis + FSDP on d;
+  * embeddings (V, d): P('model', 'data') (vocab-parallel);
+  * optimizer state inherits the param spec (sharded identically).
+
+Serving: TP only for ≤40 B params (weights replicated over 'data' so each
+data-parallel serving group holds a full replica); weights also FSDP-shard
+over 'data' for the ≥100 B archs (dbrx, llama4) — an all-gather per layer is
+the price of fitting 16 GB/chip.
+
+KV caches (B, S, Hkv, hd): batch over DP and **head_dim over 'model'** —
+Hkv (6–8) does not divide the 16-wide model axis, and sharding S would make
+the decode dynamic-update-slice a cross-shard write. hd is 128 (64 whisper),
+always divisible; the q·k contraction over the sharded hd produces a cheap
+(B, H, S)-score all-reduce that the roofline table prices out (§Perf
+iterates on exactly this choice).
+
+Rules match on parameter *path* (dict keys joined by '/'), falling back to
+replication whenever an axis does not divide the dimension (whisper's 6
+heads, xlstm's 4, …).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+BIG_MODEL_B = 60e9  # params above this FSDP-shard even for serving
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+#
+# GSPMD propagation alone is not enough: without explicit activation
+# constraints the partitioner happily un-shards the batch dimension around
+# the loss / attention contractions (measured: 37 GiB full-batch logits and
+# 16 GiB full-batch attention scores per device on qwen3-1.7b train_4k).
+# The model code calls ``constrain(x, axes...)``; it is a no-op unless a
+# mesh has been installed via ``activation_mesh`` (done by the dry-run and
+# the distributed trainer — CPU unit tests never see it).
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: Optional[Mesh] = None
+_ACT_FULL_DP: bool = False
+
+
+class activation_mesh:
+    """Context manager installing the mesh used by ``constrain``.
+
+    full_dp=True (tp_friendly=False archs): 'dp' expands to include the
+    'model' axis too — the whole mesh is data-parallel (pure FSDP)."""
+
+    def __init__(self, mesh: Optional[Mesh], full_dp: bool = False):
+        self.mesh = mesh
+        self.full_dp = full_dp
+        self.prev = None
+
+    def __enter__(self):
+        global _ACT_MESH, _ACT_FULL_DP
+        self.prev = (_ACT_MESH, _ACT_FULL_DP)
+        _ACT_MESH = self.mesh
+        _ACT_FULL_DP = self.full_dp
+        return self.mesh
+
+    def __exit__(self, *exc):
+        global _ACT_MESH, _ACT_FULL_DP
+        _ACT_MESH, _ACT_FULL_DP = self.prev
+        return False
+
+
+def lowering_mode() -> bool:
+    """True while lowering for the production mesh (dry-run / distributed
+    trainer). Model code uses this to pick bf16-in/f32-accum einsums —
+    which the XLA *CPU runtime* cannot execute (DotThunk: BF16 x BF16 = F32
+    unsupported) but TPU prefers over materialized f32 operand copies."""
+    return _ACT_MESH is not None
+
+
+def accum_dot(subscripts: str, a, b):
+    """einsum with f32 accumulation: preferred_element_type under lowering
+    (no f32 operand copies), explicit casts on the CPU execution path."""
+    if lowering_mode():
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+
+
+def best_dp_prefix(mesh: Mesh, dim: int, full_dp: bool):
+    """Longest data-parallel axis tuple whose product divides ``dim``."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if full_dp and "model" in mesh.axis_names:
+        axes.append("model")
+    while axes and dim % _axis_size(mesh, tuple(axes)) != 0:
+        axes.pop()
+    return tuple(axes) if axes else None
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) against the installed mesh.
+
+    'dp' expands to the data-parallel axes (longest prefix that divides the
+    dimension); other axes that do not divide are dropped. No-op when no
+    mesh is installed.
+    """
+    if _ACT_MESH is None:
+        return x
+    mesh = _ACT_MESH
+    resolved = []
+    for dim, a in zip(x.shape, axes + (None,) * (x.ndim - len(axes))):
+        if a == "dp":
+            resolved.append(best_dp_prefix(mesh, dim, _ACT_FULL_DP))
+        elif a == "model" and _ACT_FULL_DP:
+            resolved.append(None)   # 'model' belongs to DP in full-dp mode
+        else:
+            resolved.append(a)
+    spec = _fit(mesh, P(*resolved), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axes that do not divide their dimension (replicate instead)."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# path-regex -> (train spec, serve spec); {fsdp} substituted with 'data' or None
+_COL = P("data", "model")     # (d_in, d_out) column-parallel
+_ROW = P("model", "data")     # row-parallel
+_RULES = [
+    # attention / generic dense
+    (r".*(wq|wk|wv|wi|wg|up|in_proj|x_proj|ff_up|wx)/w$", _COL),
+    (r".*(wo|down|out_proj|ff_down|dt_proj)/w$", _ROW),
+    # MoE experts: E over model (EP), d over data (FSDP)
+    (r".*ffn/(wi|wg)/w$", P("model", "data", None)),
+    (r".*ffn/wo/w$", P("model", None, "data")),
+    (r".*router/w$", P("data", None)),
+    # embeddings
+    (r".*(embed|head)/table$", P("model", "data")),
+    (r".*encoder/pos$", P(None, "data")),
+    # ssm / xlstm specials
+    (r".*A_log$", P("model", None)),
+    (r".*mixer/D$", P("model",)),
+    (r".*conv/w$", P(None, "model")),
+    (r".*conv/b$", P("model",)),
+    (r".*(rz|ri|rf|ro)$", P(None, None, None)),
+    # norms & biases: replicated
+    (r".*", P()),
+]
+
+
+def _match(path: str, stacked: bool, mesh: Mesh, shape,
+           serve_replicate_fsdp: bool) -> P:
+    for pat, spec in _RULES:
+        if re.fullmatch(pat, path):
+            axes = tuple(spec)
+            if serve_replicate_fsdp:
+                axes = tuple(None if a == "data" else a for a in axes)
+            if stacked:
+                axes = (None,) + axes  # leading period axis
+            return _fit(mesh, P(*axes), shape)
+    raise AssertionError(f"no rule for {path}")
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _fsdp_only_spec(mesh: Mesh, shape, stacked: bool, serve_rep: bool) -> P:
+    """Pure ZeRO-3: shard the first dimension (after any stacked period
+    axis) that the flattened (data, model) axes divide; replicate the rest.
+    Used for tp_friendly=False archs whose blocks gain nothing from TP."""
+    axes_full = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    if serve_rep:
+        axes_full = tuple(a for a in axes_full if a != "data")
+    start = 1 if stacked else 0
+    out = [None] * len(shape)
+    for cand in (axes_full, axes_full[:1]):
+        if not cand:
+            continue
+        size = _axis_size(mesh, cand)
+        for i in range(start, len(shape)):
+            if shape[i] % size == 0 and shape[i] >= size:
+                out[i] = cand if len(cand) > 1 else cand[0]
+                return P(*out)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Mesh, mode: str = "train"):
+    """PartitionSpec pytree matching ``params``. mode: train|serve."""
+    serve_rep = (mode == "serve"
+                 and cfg.param_counts()["total"] < BIG_MODEL_B)
+    fsdp_only = not cfg.tp_friendly
+
+    def walk(tree, prefix="", stacked=False):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k,
+                            stacked or k == "blocks") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(walk(v, f"{prefix}/{i}", stacked)
+                     for i, v in enumerate(tree))
+        # leaf
+        path = re.sub(r"/\d+(/|$)", r"\1", prefix)  # strip list indices
+        is_stacked = "blocks" in prefix.split("/")
+        shape = tree.shape
+        if fsdp_only:
+            return _fsdp_only_spec(mesh, shape, is_stacked, serve_rep)
+        return _match(path, is_stacked, mesh, shape, serve_rep)
+
+    return walk(params)
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh: Mesh):
+    """Specs for a Cache pytree: batch over DP; KV caches are
+    **sequence-sharded** over 'model' (Hkv rarely divides the axis, and
+    sequence sharding beats head_dim sharding 11× on decode collectives:
+    softmax over the sharded S needs only (B, H, G)-sized max/sum
+    all-reduces, vs 16 MiB score all-reduces with hd sharding — §Perf
+    iteration 3; the one-token cache write lowers to an owner-masked
+    dynamic-update-slice with a 0.5 MiB new-token all-gather).
+    Recurrent-state inner dims shard over 'model'."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(x):
+        shape = x.shape
+        if x.ndim == 5:          # (P_rep, B, S, Hkv, hd) KV cache
+            spec = _fit(mesh, P(None, dp, "model", None, None), shape)
+            if tuple(spec)[2] is None:   # S not divisible: fall back to hd
+                spec = _fit(mesh, P(None, dp, None, None, "model"), shape)
+            return spec
+        if x.ndim == 4:          # mlstm C (P_rep? B H D D) / conv windows
+            return _fit(mesh, P(None, dp, None, "model"), shape)
+        if x.ndim == 3:          # (P_rep, B, d) style states
+            return _fit(mesh, P(None, dp, "model"), shape)
+        if x.ndim in (1, 2):
+            return _fit(mesh, P(dp), shape) if shape and shape[0] > 1 else P()
+        return P()
+
+    return jax.tree.map(leaf_spec, cache)
+
+
+def batch_specs(cfg: ModelConfig, batch, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def leaf_spec(x):
+        nd = getattr(x, "ndim", None) or len(x.shape)
+        return _fit(mesh, P(*((dp,) + (None,) * (nd - 1))), x.shape)
+
+    return jax.tree.map(leaf_spec, batch)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,249 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan), composing the xlstm-1.3b arch in
+a [7:1] mLSTM:sLSTM pattern.
+
+TPU adaptation of mLSTM: the paper presents a recurrent form; materializing
+the (B, H, Dh, Dh) matrix state per timestep is hopeless, so we use the
+equivalent chunkwise linear-attention form (the mLSTM *is* gated linear
+attention): within a chunk the contribution is a (Lc, Lc) masked score
+matrix — MXU work — and across chunks a (B, H, Dh, Dh) running state C plus
+normalizer n and log-scale stabilizer m are carried by a ``lax.scan``.
+Exponential input gates are stabilized by tracking the running max log-gate m
+exactly as Appendix A of the paper prescribes; all gate math in f32.
+
+sLSTM keeps the true sequential recurrence (its state is only (B, H, Dh));
+one ``lax.scan`` step per token. It exists in the architecture for its
+state-tracking abilities, not throughput — the [7:1] ratio keeps it off the
+critical path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dtype, dense_init, norm_init, rms_norm
+from .sharding import accum_dot, constrain
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def m_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    di = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    H = cfg.n_heads
+    assert di % H == 0
+    return di, di // H
+
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    di, dh = m_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    dh = di // H
+
+    def blockdiag(k):
+        # xLSTM uses block-diagonal q/k/v projections (one dh x dh block per
+        # head) — fewer params and no cross-head mixing
+        return {"w": (jax.random.normal(k, (H, dh, dh), jnp.float32)
+                      * (dh ** -0.5)).astype(dt)}
+
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dt),          # branch + gate
+        "wq": blockdiag(ks[1]),
+        "wk": blockdiag(ks[2]),
+        "wv": blockdiag(ks[3]),
+        "wi": dense_init(ks[4], di, cfg.n_heads, jnp.float32),
+        "wf": dense_init(ks[5], di, cfg.n_heads, jnp.float32),
+        "norm": norm_init(di),
+        "down": dense_init(ks[6], di, d, dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk. q/k/v: (B, H, Lc, Dh) f32; li/lf: (B, H, Lc) log gates.
+    state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)). Returns (h, new_state)."""
+    B, H, Lc, Dh = q.shape
+    C_prev, n_prev, m_prev = state
+    F = jnp.cumsum(lf, axis=-1)                         # (B, H, Lc) inclusive
+    # stabilizer: m_i = max( F_i + m_prev, max_{j<=i} (F_i - F_j + li_j) )
+    g = li - F                                          # (B, H, Lc)
+    g_run = jax.lax.associative_scan(jnp.maximum, g, axis=-1)
+    m_loc = F + g_run
+    m_cross = F + m_prev[..., None]
+    m = jnp.maximum(m_loc, m_cross)                     # (B, H, Lc)
+
+    scale = Dh ** -0.5
+    s = jnp.einsum("bhid,bhjd->bhij", q * scale, k)     # (B, H, Lc, Lc)
+    decay = F[..., :, None] - F[..., None, :] + li[..., None, :] - m[..., :, None]
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    dmat = jnp.where(mask, jnp.exp(decay), 0.0)
+    s = s * dmat
+
+    cross_scale = jnp.exp(F + m_prev[..., None] - m)    # (B, H, Lc)
+    num = (jnp.einsum("bhij,bhjd->bhid", s, v)
+           + jnp.einsum("bhid,bhde->bhie", q * scale, C_prev)
+           * cross_scale[..., None])
+    den = (jnp.sum(s, axis=-1)
+           + jnp.einsum("bhid,bhd->bhi", q * scale, n_prev) * cross_scale)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+    # state update to chunk end
+    FL = F[..., -1:]                                    # (B, H, 1)
+    m_new = jnp.maximum(m_prev + FL[..., 0],
+                        jnp.max(FL - F + li, axis=-1))
+    w = jnp.exp(FL - F + li - m_new[..., None])         # (B, H, Lc)
+    C_new = (C_prev * jnp.exp(m_prev + FL[..., 0] - m_new)[..., None, None]
+             + jnp.einsum("bhj,bhjd,bhje->bhde", w, k, v))
+    n_new = (n_prev * jnp.exp(m_prev + FL[..., 0] - m_new)[..., None]
+             + jnp.einsum("bhj,bhjd->bhd", w, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_forward(p, cfg: ModelConfig, x, state=None):
+    """x: (B, L, d) -> (y, state). Chunkwise-parallel over cfg.xlstm.chunk.
+
+    L pads to a chunk multiple with state-neutral steps (log f = 0,
+    log i = -inf), so the carried state is exact at position L."""
+    B, L0, d = x.shape
+    chunk0 = min(cfg.xlstm.chunk, L0)
+    pad = (-L0) % chunk0
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    B, L, d = x.shape
+    di, dh = m_dims(cfg)
+    H = cfg.n_heads
+    up = jnp.einsum("bld,de->ble", x, p["up"]["w"])
+    xi, z = jnp.split(up, 2, axis=-1)
+
+    xh = xi.reshape(B, L, H, dh)
+
+    def heads(w):
+        out = accum_dot("blhd,hde->blhe", xh, w)
+        return constrain(out.transpose(0, 2, 1, 3), "dp", None, None, None)
+
+    q, k, v = heads(p["wq"]["w"]), heads(p["wk"]["w"]), heads(p["wv"]["w"])
+    li = jnp.einsum("ble,eh->blh", xi.astype(jnp.float32),
+                    p["wi"]["w"]).transpose(0, 2, 1)          # log input gate
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("ble,eh->blh", xi.astype(jnp.float32),
+                   p["wf"]["w"])).transpose(0, 2, 1)
+    if pad:
+        valid = (jnp.arange(L) < L0)[None, None, :]
+        li = jnp.where(valid, li, -1e30)   # no writes on pad steps
+        lf = jnp.where(valid, lf, 0.0)     # no decay on pad steps
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    Lc = min(cfg.xlstm.chunk, L)
+    assert L % Lc == 0
+    n = L // Lc
+
+    def step(st, args):
+        qc, kc, vc, lic, lfc = args
+        h, st2 = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st2, h
+
+    def split(a):  # (B, H, L, ...) -> (n, B, H, Lc, ...)
+        return jnp.moveaxis(a.reshape(B, H, n, Lc, *a.shape[3:]), 2, 0)
+
+    state, hs = jax.lax.scan(
+        step, state,
+        (split(q), split(k), split(v), split(li), split(lf)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, L, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, L, di)
+    h = rms_norm(p["norm"], h.astype(_dtype(cfg)), cfg.norm_eps)
+    y = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = constrain(jnp.einsum("ble,ed->bld", y, p["down"]["w"]),
+                    "dp", None, None)
+    if pad:
+        out = out[:, :L0]
+    return out, state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    di, dh = m_dims(cfg)
+    H = cfg.n_heads
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def s_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_kv_heads
+    assert cfg.d_model % H == 0
+    return cfg.d_model, cfg.d_model // H
+
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, dh = s_dims(cfg)
+    H = cfg.n_kv_heads
+    ks = jax.random.split(key, 7)
+    dff = int(cfg.xlstm.proj_factor_s * d)
+    r_scale = 1.0 / math.sqrt(dh)
+
+    def rmat(k):
+        return (jax.random.normal(k, (H, dh, dh), jnp.float32) * r_scale)
+
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dt),        # z, i, f, o pre-acts
+        "rz": rmat(ks[1]), "ri": rmat(ks[2]),
+        "rf": rmat(ks[3]), "ro": rmat(ks[4]),
+        "norm": norm_init(d),
+        "ff_up": dense_init(ks[5], d, dff, dt),
+        "ff_down": dense_init(ks[6], dff, d, dt),
+    }
+
+
+def slstm_forward(p, cfg: ModelConfig, x, state=None):
+    """Sequential scan over time. x: (B, L, d)."""
+    B, L, d = x.shape
+    H = cfg.n_kv_heads
+    dh = d // H
+    pre = jnp.einsum("bld,de->ble", x, p["wx"]["w"]).astype(jnp.float32)
+    pre = pre.reshape(B, L, 4, H, dh)
+
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry                             # (B, H, dh) ... (B, H, dh)?
+        rec = lambda R: jnp.einsum("bhd,hde->bhe", h, R)
+        z_t = jnp.tanh(pre_t[:, 0] + rec(p["rz"]))
+        i_t = pre_t[:, 1] + rec(p["ri"])               # log-space
+        f_t = jax.nn.log_sigmoid(pre_t[:, 2] + rec(p["rf"]))
+        o_t = jax.nn.sigmoid(pre_t[:, 3] + rec(p["ro"]))
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(f_t + m - m_new)
+        c_new = f_e * c + i_e * z_t
+        n_new = f_e * n + i_e
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, L, d).astype(x.dtype)
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    ff = jnp.einsum("bld,df->blf", y, p["ff_up"]["w"])
+    ff = jax.nn.gelu(ff.astype(jnp.float32)).astype(ff.dtype)
+    return jnp.einsum("blf,fd->bld", ff, p["ff_down"]["w"]), state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d, dh = s_dims(cfg)
+    H = cfg.n_kv_heads
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, H, dh), -1e30, jnp.float32))

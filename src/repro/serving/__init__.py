@@ -1,0 +1,4 @@
+from .engine import EngineConfig, LLMEngine
+from .scheduler import ClusterServer, ServeRequest
+
+__all__ = ["LLMEngine", "EngineConfig", "ClusterServer", "ServeRequest"]

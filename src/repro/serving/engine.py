@@ -1,0 +1,169 @@
+"""Continuous-batching inference engine for one LLM instance.
+
+Orca-style iteration-level scheduling (the paper's §II-D background) on a
+fixed slot pool:
+
+* ``submit`` queues a request; admission runs its prefill (padded to a bucket
+  length) and writes the resulting KV/state into a free slot of the batched
+  decode cache;
+* ``step`` advances *all* active slots by one decode token (one jit'd
+  ``decode_step`` call — iteration-level batching), retiring slots that hit
+  max_new_tokens or emit EOS and immediately admitting queued requests into
+  the freed slots;
+* per-slot fill lives in ``cache.kv_len`` so ragged occupancy needs no
+  re-padding.
+
+The engine is exact: admission uses the same ``lm.prefill`` the tests
+validate against teacher forcing, so a routed request's tokens are identical
+to an offline forward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4
+    max_seq: int = 128
+    max_new_tokens: int = 16
+    eos_token: int = -1            # -1: never (synthetic vocab)
+    prefill_bucket: int = 32       # prompts padded up to a bucket multiple
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    budget: int = 0
+
+
+class LLMEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        B = ecfg.max_slots
+        self.cache = lm.make_cache(cfg, B, ecfg.max_seq)
+        self.slots = [_Slot() for _ in range(B)]
+        self.queue: deque = deque()
+        self.results: Dict[int, dict] = {}
+        self._next_token = jnp.zeros((B, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda params, tok, cache: lm.decode_step(params, cfg, tok, cache))
+        self._steps = 0
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, request_id: int, tokens: np.ndarray,
+               max_new_tokens: Optional[int] = None,
+               extra: Optional[dict] = None) -> None:
+        self.queue.append((request_id, np.asarray(tokens, np.int32),
+                           max_new_tokens or self.ecfg.max_new_tokens,
+                           extra or {}))
+        self._admit()
+
+    def step(self) -> List[int]:
+        """One decode iteration for all active slots. Returns retired ids."""
+        active = [i for i, s in enumerate(self.slots) if s.request_id is not None]
+        if not active:
+            self._admit()
+            return []
+        logits, self.cache = self._decode(self.params, self._next_token,
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._next_token = jnp.asarray(nxt[:, None])
+        retired = []
+        for i in active:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.generated.append(tok)
+            s.budget -= 1
+            if s.budget <= 0 or tok == self.ecfg.eos_token:
+                self.results[s.request_id] = {
+                    "tokens": list(s.generated),
+                    "n_steps": len(s.generated)}
+                retired.append(s.request_id)
+                self.slots[i] = _Slot()
+        self._steps += 1
+        if retired:
+            self._admit()
+        return retired
+
+    def run_to_completion(self, max_iters: int = 10000) -> Dict[int, dict]:
+        it = 0
+        while (self.queue or any(s.request_id is not None
+                                 for s in self.slots)):
+            self.step()
+            it += 1
+            if it > max_iters:
+                raise RuntimeError("engine did not drain")
+        return self.results
+
+    @property
+    def active_count(self) -> int:
+        return sum(s.request_id is not None for s in self.slots)
+
+    @property
+    def queue_len(self) -> int:
+        return self.active_count + len(self.queue)
+
+    # -- internals -------------------------------------------------------------
+    def _admit(self):
+        while self.queue:
+            free = [i for i, s in enumerate(self.slots) if s.request_id is None]
+            if not free:
+                return
+            i = free[0]
+            request_id, tokens, budget, extra = self.queue.popleft()
+            self._prefill_into(i, request_id, tokens, budget, extra)
+
+    def _prefill_into(self, slot: int, request_id: int, tokens: np.ndarray,
+                      budget: int, extra: dict):
+        e = self.ecfg
+        L = len(tokens)
+        assert L + budget <= e.max_seq, "request exceeds engine max_seq"
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.asarray(
+                extra.get("frames",
+                          np.zeros((1, self.cfg.encoder.n_frames,
+                                    self.cfg.d_model), np.float32)),
+                jnp.bfloat16)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.asarray(
+                extra.get("patches",
+                          np.zeros((1, self.cfg.cross_kv_tokens,
+                                    self.cfg.d_model), np.float32)),
+                jnp.bfloat16)
+        logits, cache1 = lm.prefill(self.params, self.cfg, batch,
+                                    max_seq=e.max_seq)
+        # splice single-request cache into batch cache at `slot`
+        def splice(full, one):
+            if full.ndim < 2:
+                return full
+            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, 1)
+
+        self.cache = self.cache._replace(
+            layer=jax.tree.map(splice, self.cache.layer, cache1.layer),
+            cross=jax.tree.map(splice, self.cache.cross, cache1.cross),
+            kv_len=self.cache.kv_len.at[slot].set(L),
+        )
+        first = int(jnp.argmax(logits[0]))
+        s = self.slots[slot]
+        s.request_id = request_id
+        s.generated = [first]
+        s.budget = budget - 1
+        self._next_token = self._next_token.at[slot, 0].set(first)
+        if s.budget <= 0:
+            self.results[request_id] = {"tokens": list(s.generated),
+                                        "n_steps": 1}
+            self.slots[slot] = _Slot()

@@ -1,0 +1,3 @@
+from .optim import adafactor, adamw, adamw8bit, make_optimizer
+
+__all__ = ["adamw", "adamw8bit", "adafactor", "make_optimizer"]

@@ -1,0 +1,116 @@
+"""Gradient compression for the cross-pod data-parallel all-reduce.
+
+At 2+ pods the gradient all-reduce crosses DCN (slow vs ICI), so the trainer
+can compress the pod-axis reduction:
+
+* ``int8`` — error-feedback blockwise-int8: quantize (grad + residual),
+  all-reduce the int8 payload (4× less DCN traffic than f32), keep the
+  quantization error as residual for the next step (Seide et al. / 1-bit
+  Adam lineage — EF makes the bias telescoping, preserving convergence).
+* ``topk`` — error-feedback magnitude top-k per tensor (k as a fraction),
+  exchanged dense-masked (simple, deterministic shapes; a production DCN
+  implementation would exchange (indices, values) pairs).
+
+Both are pure functions usable inside jit/shard_map; state is a residual
+pytree shaped like the gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    last = x.shape[-1] if x.ndim else 1
+    block = min(QBLOCK, max(last, 1))
+    pad = (-last) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if x.ndim else x
+    xb = xp.reshape(x.shape[:-1] + (-1, block)) if x.ndim else xp
+    s = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    s = jnp.where(s == 0, 1.0, s)
+    q = jnp.clip(jnp.round(xb / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _dequantize_int8(q, s, shape):
+    xf = q.astype(jnp.float32) * s
+    xf = xf.reshape(shape[:-1] + (-1,))[..., :shape[-1]] if shape else xf
+    return xf
+
+
+def compress_int8(grads, residual):
+    """Returns (payload int8 pytree to reduce, scales, new_residual_fn).
+
+    new residual is computed against the *local* quantization (standard EF)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = _quantize_int8(gf)
+        deq = _dequantize_int8(q, s, gf.shape)
+        return q, s, gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    qs, ss, rs = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    return (jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, ss),
+            jax.tree.unflatten(treedef, rs))
+
+
+def decompress_int8(payload, scales, grads_template):
+    return jax.tree.map(
+        lambda q, s, g: _dequantize_int8(q, s, g.shape).astype(jnp.float32),
+        payload, scales, grads_template)
+
+
+def compress_topk(grads, residual, frac: float = 0.05):
+    """EF top-|frac| sparsification (dense-masked)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+        sent = gf * mask
+        return sent, gf - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    sents, rs = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    return jax.tree.unflatten(treedef, sents), jax.tree.unflatten(treedef, rs)
+
+
+def init_residual(grads_or_params):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_or_params)
+
+
+def psum_compressed(grads, residual, axis_name: str, method: str = "int8"):
+    """All-reduce ``grads`` over ``axis_name`` with EF compression.
+
+    Use inside shard_map/pmap-style code where ``axis_name`` is bound.
+    Returns (mean_grads_f32, new_residual).
+    """
+    n = jax.lax.psum(1, axis_name)
+    if method == "int8":
+        q, s, new_res = compress_int8(grads, residual)
+        # int8 payloads summed in int32 to avoid overflow across replicas
+        summed = jax.tree.map(
+            lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_name), q)
+        s_sum = jax.tree.map(lambda ss: jax.lax.psum(ss, axis_name) / n, s)
+        mean = jax.tree.map(
+            lambda qq, ss, g: _dequantize_int8(qq.astype(jnp.float32) / n,
+                                               ss, g.shape),
+            summed, s_sum, grads)
+        return mean, new_res
+    if method == "topk":
+        sent, new_res = compress_topk(grads, residual)
+        mean = jax.tree.map(lambda x: jax.lax.psum(x, axis_name) / n, sent)
+        return mean, new_res
+    # no compression
+    mean = jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.float32), axis_name) / n, grads)
+    return mean, residual

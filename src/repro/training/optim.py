@@ -1,0 +1,242 @@
+"""Optimizers (pure JAX, optax-style init/update pairs).
+
+Three memory tiers, selected per architecture size so the ≥100 B archs fit
+16 GB/chip on the production mesh (§Dry-run memory table):
+
+* ``adamw``     — fp32 m+v (8 bytes/param state). Default for ≤15 B archs.
+* ``adamw8bit`` — block-wise dynamic-quantized int8 m+v (2 bytes/param +
+  fp32 per-block scales). The distributed-optimization trick for dbrx-132b.
+* ``adafactor`` — factored second moment, no first moment (≈0 bytes/param
+  beyond factored vectors). Used for llama4-maverick-400b.
+
+All states are sharded exactly like their parameters (the dry-run passes the
+param PartitionSpec tree for the state too), i.e. ZeRO-3 via the FSDP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256  # int8 quantization block
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (new_params, new_state)
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _clipped(grads, clip):
+    gnorm = _tree_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(cfg: OptConfig = OptConfig()) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32),
+                "gnorm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clipped(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            new_p = (p.astype(jnp.float32)
+                     - cfg.lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                 + cfg.weight_decay * p.astype(jnp.float32)))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step,
+                            "gnorm": gnorm}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# 8-bit AdamW (block-wise dynamic quantization, Dettmers-style)
+# ---------------------------------------------------------------------------
+
+def _q8(x):
+    """Blockwise-quantize f32 along the LAST axis -> (int8 same shape,
+    scales (..., n_blocks)). Blocking the last axis (not a flat view) keeps
+    q shaped exactly like the parameter, so q shards with the parameter's
+    PartitionSpec and scales with its leading dims — required for the
+    dry-run's honest per-device memory accounting."""
+    last = x.shape[-1]
+    block = min(QBLOCK, last)
+    pad = (-last) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = xp.shape[-1] // block
+    xb = xp.reshape(x.shape[:-1] + (nb, block))
+    s = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    s = jnp.where(s == 0, 1.0, s)
+    q = jnp.clip(jnp.round(xb / s[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :last]
+    return q, s
+
+
+def _dq8(q, s, shape):
+    last = shape[-1]
+    block = min(QBLOCK, last)
+    pad = (-last) % block
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    nb = qp.shape[-1] // block
+    xb = qp.reshape(shape[:-1] + (nb, block)).astype(jnp.float32)
+    xf = xb * s[..., None]
+    return xf.reshape(qp.shape)[..., :last]
+
+
+def adamw8bit(cfg: OptConfig = OptConfig()) -> Optimizer:
+    def init(params):
+        def zq(p):
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return {"m": jax.tree.map(zq, params),
+                "v": jax.tree.map(zq, params),
+                "step": jnp.zeros((), jnp.int32),
+                "gnorm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clipped(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mq, vq):
+            m = cfg.b1 * _dq8(mq["q"], mq["s"], p.shape) + (1 - cfg.b1) * g
+            v = cfg.b2 * _dq8(vq["q"], vq["s"], p.shape) + (1 - cfg.b2) * g * g
+            v = jnp.maximum(v, 0.0)
+            new_p = (p.astype(jnp.float32)
+                     - cfg.lr * ((m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+                                 + cfg.weight_decay * p.astype(jnp.float32)))
+            qm, sm = _q8(m)
+            qv, sv = _q8(v)
+            return new_p.astype(p.dtype), {"q": qm, "s": sm}, {"q": qv, "s": sv}
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state["m"])
+        leaves_v = treedef.flatten_up_to(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v):
+            a, b, c = upd(p, g, m, v)
+            new_p.append(a)
+            new_m.append(b)
+            new_v.append(c)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "step": step, "gnorm": gnorm})
+
+    return Optimizer(init, update, "adamw8bit")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+def adafactor(cfg: OptConfig = OptConfig()) -> Optimizer:
+    def init(params):
+        def fac(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(fac, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim")),
+                "step": jnp.zeros((), jnp.int32),
+                "gnorm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clipped(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, f):
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                                       [..., None], 1e-30))
+                upd_ = g * jax.lax.rsqrt(denom + 1e-30)
+                newf = {"vr": vr, "vc": vc}
+            else:
+                v = decay * f["v"] + (1 - decay) * g2
+                upd_ = g * jax.lax.rsqrt(v + 1e-30)
+                newf = {"v": v}
+            # relative update clipping (Adafactor's d=1.0)
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            new_p = (p.astype(jnp.float32) - cfg.lr * upd_
+                     - cfg.lr * cfg.weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), newf
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_f = treedef.flatten_up_to(state["f"])
+        new_p, new_f = [], []
+        for p, g, f in zip(leaves_p, leaves_g, leaves_f):
+            a, b = upd(p, g, f)
+            new_p.append(a)
+            new_f.append(b)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"f": jax.tree.unflatten(treedef, new_f), "step": step,
+                 "gnorm": gnorm})
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, cfg: OptConfig = OptConfig()) -> Optimizer:
+    return {"adamw": adamw, "adamw8bit": adamw8bit,
+            "adafactor": adafactor}[name](cfg)
+
+
+def optimizer_for_arch(total_params: float) -> str:
+    """Memory-tier policy (see module docstring)."""
+    if total_params > 200e9:
+        return "adafactor"
+    if total_params > 60e9:
+        return "adamw8bit"
+    return "adamw"

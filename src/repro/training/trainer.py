@@ -1,0 +1,166 @@
+"""Distributed training loop.
+
+Composes the substrates: model zoo (scan-over-layers + remat), sharding rules
+(FSDP×TP×DP), optimizers (memory-tiered), gradient accumulation
+(microbatching via ``lax.scan``), optional cross-pod gradient compression,
+deterministic data pipeline, and fault-tolerant checkpointing
+(checkpoint/restart → the trainer resumes from the latest committed step).
+
+The same Trainer drives the CPU examples (tiny smoke configs on a (1, 1)
+mesh) and the production dry-run path (it is what ``launch/train.py`` runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint import CheckpointManager
+from ..data import DataConfig, SyntheticLMData
+from ..models import lm
+from ..models import sharding as shard
+from ..models.config import ModelConfig
+from .optim import OptConfig, make_optimizer, optimizer_for_arch
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    microbatches: int = 1          # gradient accumulation steps
+    steps: int = 100
+    optimizer: Optional[str] = None  # default: by model size
+    opt: OptConfig = OptConfig()
+    remat: bool = True
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 2
+    log_every: int = 10
+    seed: int = 0
+    # synthetic-corpus difficulty (tests/examples use an easy setting so the
+    # loss visibly decreases within ~100 CPU steps)
+    data_vocab: Optional[int] = None   # tokens drawn from [0, data_vocab)
+    data_chains: int = 8
+    data_branch: int = 32
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt_name = tcfg.optimizer or optimizer_for_arch(
+            cfg.param_counts()["total"])
+        self.opt = make_optimizer(self.opt_name, tcfg.opt)
+        self.data = SyntheticLMData(DataConfig(
+            vocab=min(tcfg.data_vocab or cfg.vocab, cfg.vocab),
+            seq_len=tcfg.seq_len, global_batch=tcfg.global_batch,
+            seed=tcfg.seed, n_chains=tcfg.data_chains,
+            branch=tcfg.data_branch))
+        self.ckpt = (CheckpointManager(tcfg.checkpoint_dir,
+                                       keep=tcfg.keep_checkpoints,
+                                       save_interval_steps=tcfg.checkpoint_every)
+                     if tcfg.checkpoint_dir else None)
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        cfg, tcfg = self.cfg, self.tcfg
+        assert tcfg.global_batch % tcfg.microbatches == 0
+        mb = tcfg.global_batch // tcfg.microbatches
+
+        def loss_fn(params, batch):
+            l, aux = lm.loss_fn(params, cfg, batch, remat=tcfg.remat)
+            return l, aux
+
+        def train_step(params, opt_state, batch):
+            if tcfg.microbatches == 1:
+                (l, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                def micro(carry, mb_batch):
+                    acc = carry
+                    (l, aux), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb_batch)
+                    acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), acc, g)
+                    return acc, (l, aux["nll"])
+
+                split = jax.tree.map(
+                    lambda x: x.reshape(tcfg.microbatches, mb, *x.shape[1:]),
+                    batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, (ls, nlls) = jax.lax.scan(micro, zeros, split)
+                grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+                l = jnp.mean(ls)
+                aux = {"nll": jnp.mean(nlls), "aux": jnp.float32(0)}
+            new_params, new_state = self.opt.update(grads, opt_state, params)
+            metrics = {"loss": l, "nll": aux["nll"],
+                       "gnorm": new_state["gnorm"]}
+            return new_params, new_state, metrics
+
+        if self.mesh is not None:
+            params_abs = jax.eval_shape(lambda k: lm.init(k, cfg),
+                                        jax.random.key(tcfg.seed))
+            self.pspecs = shard.param_specs(cfg, params_abs, self.mesh)
+            from ..launch.dryrun import opt_state_specs
+            self.sspecs = opt_state_specs(self.opt_name, params_abs,
+                                          self.pspecs)
+            psh = shard.to_shardings(self.mesh, self.pspecs)
+            ssh = shard.to_shardings(self.mesh, self.sspecs)
+            self._step = jax.jit(train_step,
+                                 out_shardings=(psh, ssh, None),
+                                 donate_argnums=(0, 1))
+        else:
+            self.pspecs = self.sspecs = None
+            self._step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def init_state(self, resume: bool = True):
+        key = jax.random.key(self.tcfg.seed)
+        params = lm.init(key, self.cfg)
+        opt_state = self.opt.init(params)
+        start = 0
+        if self.ckpt and resume and self.ckpt.latest_step() is not None:
+            (params, opt_state), manifest = self.ckpt.restore(
+                (params, opt_state), mesh=self.mesh,
+                specs=(self.pspecs, self.sspecs) if self.pspecs else None)
+            start = manifest["step"]
+        return params, opt_state, start
+
+    def run(self, steps: Optional[int] = None, resume: bool = True,
+            callback: Optional[Callable[[int, Dict], None]] = None):
+        steps = steps or self.tcfg.steps
+        params, opt_state, start = self.init_state(resume=resume)
+        history = []
+        it = self.data.iterator(start_step=start)
+        t0 = time.time()
+        for step in range(start, steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, opt_state, metrics = self._step(params, opt_state, batch)
+            if step % self.tcfg.log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["tokens_per_s"] = (self.tcfg.global_batch * self.tcfg.seq_len
+                                     * (step - start + 1) / (time.time() - t0))
+                history.append(m)
+                if callback:
+                    callback(step, m)
+            if self.ckpt and self.ckpt.should_save(step):
+                self.ckpt.save(step, (params, opt_state),
+                               specs=((self.pspecs, self.sspecs)
+                                      if self.pspecs else None),
+                               metadata={"arch": self.cfg.name})
+        if self.ckpt:
+            self.ckpt.save(steps, (params, opt_state),
+                           specs=((self.pspecs, self.sspecs)
+                                  if self.pspecs else None),
+                           metadata={"arch": self.cfg.name}, blocking=True)
+            self.ckpt.wait()
+        return params, opt_state, history

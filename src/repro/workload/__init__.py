@@ -1,0 +1,4 @@
+from .trace import Trace, build_trace
+from .tokenizer import count_tokens
+
+__all__ = ["Trace", "build_trace", "count_tokens"]

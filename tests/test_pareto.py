@@ -1,0 +1,103 @@
+"""Unit + property tests for repro.core.pareto (NSGA-II building blocks)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pareto import (crowding_distance, dominance_matrix,
+                               hypervolume_2d, non_dominated_sort, pareto_mask)
+
+
+def brute_ranks(F: np.ndarray) -> np.ndarray:
+    n = len(F)
+    rank = -np.ones(n, int)
+    alive = np.ones(n, bool)
+    cur = 0
+    while alive.any():
+        dom = ((F[:, None, :] <= F[None, :, :]).all(-1)
+               & (F[:, None, :] < F[None, :, :]).any(-1))
+        dom = dom & alive[:, None] & alive[None, :]
+        front = alive & ~dom.any(0)
+        rank[front] = cur
+        alive &= ~front
+        cur += 1
+    return rank
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 48), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_non_dominated_sort_matches_bruteforce(seed, P, M):
+    rng = np.random.default_rng(seed)
+    # include ties with prob 1/2 (duplicated rows stress the strict-dominance edge)
+    F = rng.random((P, M)).astype(np.float32)
+    if seed % 2 == 0 and P > 2:
+        F[P // 2] = F[0]
+    got = np.asarray(non_dominated_sort(jnp.asarray(F)))
+    want = brute_ranks(F)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dominance_matrix_antisymmetric_and_irreflexive():
+    rng = np.random.default_rng(0)
+    F = rng.random((32, 3)).astype(np.float32)
+    D = np.asarray(dominance_matrix(jnp.asarray(F)))
+    assert not D.diagonal().any()
+    assert not (D & D.T).any()  # i dominates j => j not dominates i
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pareto_mask_is_rank_zero(seed):
+    rng = np.random.default_rng(seed)
+    F = rng.random((20, 3)).astype(np.float32)
+    mask = np.asarray(pareto_mask(jnp.asarray(F)))
+    ranks = np.asarray(non_dominated_sort(jnp.asarray(F)))
+    np.testing.assert_array_equal(mask, ranks == 0)
+
+
+def test_crowding_boundaries_are_infinite():
+    # one front, distinct objective values: extremes must get +inf
+    F = np.array([[0.0, 1.0], [0.25, 0.75], [0.5, 0.5], [1.0, 0.0]],
+                 np.float32)
+    rank = non_dominated_sort(jnp.asarray(F))
+    assert int(rank.max()) == 0
+    d = np.asarray(crowding_distance(jnp.asarray(F), rank))
+    assert np.isinf(d[0]) and np.isinf(d[3])
+    assert np.isfinite(d[1]) and np.isfinite(d[2])
+
+
+def test_crowding_prefers_sparser_point():
+    # middle points: one in a dense cluster, one isolated
+    F = np.array([[0.0, 1.0], [0.1, 0.9], [0.12, 0.88], [0.5, 0.3],
+                  [1.0, 0.0]], np.float32)
+    rank = non_dominated_sort(jnp.asarray(F))
+    d = np.asarray(crowding_distance(jnp.asarray(F), rank))
+    assert d[3] > d[2]
+
+
+def test_crowding_within_front_only():
+    # two fronts; crowding of front-1 members must not use front-0 neighbors
+    F0 = np.array([[0.0, 1.0], [0.5, 0.5], [1.0, 0.0]])
+    F1 = F0 + 2.0
+    F = np.concatenate([F0, F1]).astype(np.float32)
+    rank = non_dominated_sort(jnp.asarray(F))
+    assert set(np.asarray(rank)) == {0, 1}
+    d = np.asarray(crowding_distance(jnp.asarray(F), rank))
+    # both fronts have identical geometry: same crowding pattern
+    np.testing.assert_allclose(d[:3][np.isfinite(d[:3])],
+                               d[3:][np.isfinite(d[3:])], rtol=1e-6)
+
+
+def test_hypervolume_2d_unit_square():
+    # single point at origin dominates the whole [0, 1]^2 box
+    F = np.array([[0.0, 0.0]], np.float32)
+    hv = float(hypervolume_2d(jnp.asarray(F), jnp.array([1.0, 1.0])))
+    assert hv == pytest.approx(1.0)
+
+
+def test_hypervolume_2d_staircase():
+    F = np.array([[0.0, 0.5], [0.5, 0.0]], np.float32)
+    hv = float(hypervolume_2d(jnp.asarray(F), jnp.array([1.0, 1.0])))
+    # two rectangles 1x0.5 + 0.5x0.5 overlap region counted once = 0.75
+    assert hv == pytest.approx(0.75)

@@ -1,0 +1,246 @@
+"""System behaviour tests for the routing reproduction layer:
+policy decode (Algorithm 2), fitness evaluator vs. discrete-event oracle,
+baselines, runtime router failover, and end-to-end NSGA-II routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.spec import paper_testbed
+from repro.core import baselines
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.nsga2 import NSGA2, NSGA2Config
+from repro.core.objectives import overall_scores
+from repro.core.policy import (BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS,
+                               decide_pair_jnp, decide_pair_py)
+from repro.core.router import RequestRouter
+from repro.workload.trace import build_trace
+
+CLUSTER = paper_testbed()
+TRACE = build_trace(120, seed=3)
+
+
+@pytest.fixture(scope="module")
+def evaluator():
+    return TraceEvaluator(TRACE, CLUSTER, EvalConfig(concurrency=1))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: jnp decode == python oracle
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_decide_pair_jnp_matches_python_oracle(seed):
+    rng = np.random.default_rng(seed)
+    arrays = CLUSTER.to_arrays()
+    genome = BOUNDS_LO + rng.random(6).astype(np.float32) * (BOUNDS_HI - BOUNDS_LO)
+    complexity = float(rng.random())
+    pred_cat = int(rng.integers(0, 3))
+    conf = float(rng.random())
+    queue = rng.integers(0, 12, size=arrays.n_nodes)
+    got = int(decide_pair_jnp(jnp.asarray(genome),
+                              complexity=jnp.float32(complexity),
+                              pred_category=jnp.int32(pred_cat),
+                              pred_conf=jnp.float32(conf),
+                              queue_len=jnp.asarray(queue), arrays=arrays))
+    want = decide_pair_py(genome, complexity=complexity,
+                          pred_category=pred_cat, pred_conf=conf,
+                          queue_len=queue, arrays=arrays)
+    assert got == want
+
+
+def test_paper_default_thresholds_route_easy_to_edge():
+    arrays = CLUSTER.to_arrays()
+    # trivially easy request, empty queues -> must go to an edge pair
+    p = decide_pair_py(PAPER_DEFAULTS, complexity=0.05, pred_category=2,
+                       pred_conf=0.9, queue_len=[0, 0, 0, 0], arrays=arrays)
+    assert bool(np.asarray(arrays.pair_is_edge)[p])
+    # very complex request -> cloud fallback
+    p = decide_pair_py(PAPER_DEFAULTS, complexity=0.95, pred_category=0,
+                       pred_conf=0.9, queue_len=[0, 0, 0, 0], arrays=arrays)
+    assert p == int(arrays.cloud_fallback_pair)
+    # easy but all edge queues above theta_q -> cloud fallback
+    p = decide_pair_py(PAPER_DEFAULTS, complexity=0.05, pred_category=2,
+                       pred_conf=0.9, queue_len=[0, 9, 9, 9], arrays=arrays)
+    assert p == int(arrays.cloud_fallback_pair)
+
+
+def test_confident_code_prediction_selects_coder_model():
+    arrays = CLUSTER.to_arrays()
+    p = decide_pair_py(PAPER_DEFAULTS, complexity=0.1, pred_category=0,
+                       pred_conf=0.95, queue_len=[0, 0, 0, 0], arrays=arrays)
+    from repro.cluster.spec import MODEL_TYPE_INDEX
+    assert int(np.asarray(arrays.pair_model_type)[p]) == MODEL_TYPE_INDEX["coder"]
+    # low confidence -> instruct
+    p = decide_pair_py(PAPER_DEFAULTS, complexity=0.1, pred_category=0,
+                       pred_conf=0.4, queue_len=[0, 0, 0, 0], arrays=arrays)
+    assert int(np.asarray(arrays.pair_model_type)[p]) == MODEL_TYPE_INDEX["instruct"]
+
+
+# ---------------------------------------------------------------------------
+# JAX evaluator == discrete-event simulator (independent implementations)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("concurrency", [1, 4, 10])
+def test_jax_evaluator_matches_des_oracle(concurrency):
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, CLUSTER.n_pairs, TRACE.n_requests).astype(np.int32)
+    ev = TraceEvaluator(TRACE, CLUSTER, EvalConfig(concurrency=concurrency))
+    res = ev.run_assignment(jnp.asarray(assign))
+    sim = ClusterSimulator(TRACE, CLUSTER).run(assign, concurrency=concurrency)
+    np.testing.assert_allclose(np.asarray(res.rt), sim.rt, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.q), sim.q, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.cost), sim.cost, rtol=1e-5)
+
+
+def test_des_heap_variant_agrees_at_conc1():
+    rng = np.random.default_rng(1)
+    assign = rng.integers(0, CLUSTER.n_pairs, TRACE.n_requests)
+    sim = ClusterSimulator(TRACE, CLUSTER)
+    a = sim.run(assign, concurrency=1)
+    b = sim.run_event_heap(assign, concurrency=1)
+    np.testing.assert_allclose(a.rt, b.rt, rtol=1e-9)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_queueing_invariants(seed, conc):
+    """Properties: waits are non-negative; at concurrency 1 there is no wait;
+    rt >= net + service always; busy time conserved."""
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, CLUSTER.n_pairs, TRACE.n_requests)
+    sim = ClusterSimulator(TRACE, CLUSTER)
+    r = sim.run(assign, concurrency=conc)
+    assert (r.wait >= -1e-9).all()
+    if conc == 1:
+        np.testing.assert_allclose(r.wait, 0.0, atol=1e-9)
+    service = sim.service[np.arange(len(assign)), assign]
+    net = sim.up[np.arange(len(assign)), assign] + \
+        sim.down[np.arange(len(assign)), assign]
+    # float32 tables: allow small absolute+relative slack
+    assert (r.rt >= (service + net) * (1 - 1e-5) - 1e-4).all()
+    np.testing.assert_allclose(r.node_busy_time.sum(), service.sum(), rtol=1e-5)
+
+
+def test_concurrency_increases_mean_rt():
+    assign = baselines.edge_only(TRACE, CLUSTER)
+    sim = ClusterSimulator(TRACE, CLUSTER)
+    rt1 = sim.run(assign, concurrency=1).rt.mean()
+    rt10 = sim.run(assign, concurrency=10).rt.mean()
+    assert rt10 >= rt1  # contention can only hurt mean latency here
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+def test_baseline_assignments_valid_and_shaped():
+    arrays = CLUSTER.to_arrays()
+    for fn in (baselines.cloud_only, baselines.edge_only,
+               baselines.round_robin):
+        a = fn(TRACE, CLUSTER)
+        assert a.shape == (TRACE.n_requests,)
+        assert (a >= 0).all() and (a < CLUSTER.n_pairs).all()
+    a = baselines.random_router(TRACE, CLUSTER)
+    assert (a >= 0).all() and (a < CLUSTER.n_pairs).all()
+
+
+def test_cloud_only_all_cloud_edge_only_all_edge():
+    arrays = CLUSTER.to_arrays()
+    is_edge = np.asarray(arrays.pair_is_edge)
+    assert not is_edge[baselines.cloud_only(TRACE, CLUSTER)].any()
+    assert is_edge[baselines.edge_only(TRACE, CLUSTER)].all()
+
+
+def test_round_robin_half_cloud():
+    a = baselines.round_robin(TRACE, CLUSTER)
+    is_edge = np.asarray(CLUSTER.to_arrays().pair_is_edge)
+    share = is_edge[a].mean()
+    assert 0.45 <= share <= 0.55
+
+
+def test_edge_only_model_matches_task_type():
+    from repro.cluster.spec import MODEL_TYPE_INDEX
+    a = baselines.edge_only(TRACE, CLUSTER)
+    ptype = np.asarray(CLUSTER.to_arrays().pair_model_type)
+    for i in range(TRACE.n_requests):
+        task = int(TRACE.task[i])
+        want = {0: "coder", 1: "math", 2: "instruct", 3: "instruct"}[task]
+        assert ptype[a[i]] == MODEL_TYPE_INDEX[want]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: NSGA-II beats naive baselines on the composite score
+# ---------------------------------------------------------------------------
+def test_nsga2_router_beats_naive_baselines(evaluator):
+    cfg = NSGA2Config(pop_size=32, n_generations=30,
+                      lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
+    opt = NSGA2(evaluator.make_fitness("continuous"), cfg)
+    state = opt.evolve_scan(jax.random.key(0), 30)
+    genome, _ = opt.select_by_weights(state, jnp.array([1 / 3, 1 / 3, 1 / 3]))
+    rows = {}
+    for name, a in [("cloud", baselines.cloud_only(TRACE, CLUSTER)),
+                    ("edge", baselines.edge_only(TRACE, CLUSTER)),
+                    ("random", baselines.random_router(TRACE, CLUSTER)),
+                    ("rr", baselines.round_robin(TRACE, CLUSTER))]:
+        rows[name] = evaluator.summarize(evaluator.run_assignment(jnp.asarray(a)))
+    rows["proposed"] = evaluator.summarize(evaluator.run_thresholds(genome))
+    names = list(rows)
+    ov = overall_scores(np.array([rows[n]["avg_quality"] for n in names]),
+                        np.array([rows[n]["avg_response_time"] for n in names]),
+                        np.array([rows[n]["avg_cost"] for n in names]))
+    scores = dict(zip(names, ov))
+    assert scores["proposed"] >= scores["random"]
+    assert scores["proposed"] >= scores["rr"]
+    assert scores["proposed"] >= scores["edge"]
+
+
+# ---------------------------------------------------------------------------
+# Runtime router: failover + hedging
+# ---------------------------------------------------------------------------
+def test_router_failover_avoids_dead_edge_nodes():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    # easy request normally goes to edge-0 (node 1)
+    req = TRACE.requests[2]
+    d0 = router.route(req)
+    # kill every edge node: routing must fall back to cloud
+    for j in (1, 2, 3):
+        router.monitor.mark_down(j)
+    d1 = router.route(req)
+    assert d1.node == 0 and not d1.go_edge
+
+
+def test_router_failover_cloud_down_picks_healthy_edge():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    router.monitor.mark_down(0)
+    # complex request would go to cloud; must fail over to a healthy node
+    hard = max(TRACE.requests, key=lambda r: r.prompt_tokens)
+    d = router.route(hard)
+    assert d.node != 0
+
+
+def test_router_no_healthy_nodes_raises():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    for j in range(4):
+        router.monitor.mark_down(j)
+    with pytest.raises(RuntimeError):
+        router.route(TRACE.requests[0])
+
+
+def test_router_backup_pair_on_different_node():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    d = router.route(TRACE.requests[0], want_backup=True)
+    assert d.backup_pair is not None
+    pn = np.asarray(CLUSTER.to_arrays().pair_node)
+    assert pn[d.backup_pair] != d.node
+
+
+def test_des_failure_injection_reroutes_to_cloud():
+    assign = baselines.edge_only(TRACE, CLUSTER)
+    sim = ClusterSimulator(TRACE, CLUSTER)
+    res = sim.run(assign, concurrency=1,
+                  down_nodes={1: (0.0, float("inf"))})
+    # no request may have executed on node 1
+    pn = np.asarray(CLUSTER.to_arrays().pair_node)
+    assert (pn[res.assign] != 1).all()
