@@ -30,11 +30,32 @@ class SimResult:
     assign: np.ndarray
     wait: np.ndarray
     node_busy_time: np.ndarray
+    # phase split (QoE accounting, mirrors fitness.EvalResult); optional so
+    # externally-constructed pre-QoE SimResults keep working
+    ttft: Optional[np.ndarray] = None   # upload + queue wait + prefill
+    tpot: Optional[np.ndarray] = None   # decode seconds per output token
 
     def summary(self) -> Dict[str, float]:
-        return {"avg_quality": float(self.q.mean()),
-                "avg_response_time": float(self.rt.mean()),
-                "avg_cost": float(self.cost.mean())}
+        out = {"avg_quality": float(self.q.mean()),
+               "avg_response_time": float(self.rt.mean()),
+               "avg_cost": float(self.cost.mean())}
+        if self.ttft is not None:
+            out["avg_ttft"] = float(self.ttft.mean())
+            out["avg_tpot"] = float(self.tpot.mean())
+        return out
+
+    def slo_attainment(self, ttft_deadline: np.ndarray,
+                       tpot_deadline: np.ndarray) -> float:
+        """Fraction of requests meeting both phase deadlines.
+
+        Deliberately re-implements the attainment predicate rather than
+        calling objectives.slo_ok: this class is the independent oracle the
+        JAX path is validated against (tests/test_slo.py), so sharing the
+        expression would defeat the cross-check.
+        """
+        assert self.ttft is not None, "result carries no phase accounting"
+        ok = (self.ttft <= ttft_deadline) & (self.tpot <= tpot_deadline)
+        return float(ok.mean())
 
 
 class ClusterSimulator:
@@ -52,6 +73,8 @@ class ClusterSimulator:
         self.service = np.asarray(tables.service)
         self.up = np.asarray(tables.up_time)
         self.down = np.asarray(tables.down_time)
+        self.prefill = np.asarray(tables.prefill_time)
+        self.tpot_pair = np.asarray(tables.tpot)
         self.pair_node = np.asarray(arrays.pair_node)
         self.node_conc = np.asarray(arrays.node_conc)
         self.arrays = arrays
@@ -81,6 +104,8 @@ class ClusterSimulator:
         cost = np.zeros(I)
         rt = np.zeros(I)
         wait = np.zeros(I)
+        ttft = np.zeros(I)
+        tpot = np.zeros(I)
         out_assign = np.zeros(I, np.int64)
         busy = np.zeros(n_nodes)
 
@@ -109,11 +134,14 @@ class ClusterSimulator:
             cost[i] = self.cost[i, pair]
             rt[i] = completion - arrival
             wait[i] = start - ready
+            # first token leaves prefill at start + prefill_time
+            ttft[i] = (start + self.prefill[i, pair]) - arrival
+            tpot[i] = self.tpot_pair[pair]
             out_assign[i] = pair
             busy[node] += self.service[i, pair]
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot)
 
     # -- event-heap variant -------------------------------------------------
     def run_event_heap(self, assign: Sequence[int], concurrency: int = 1
@@ -126,6 +154,7 @@ class ClusterSimulator:
 
         q = np.zeros(I); cost = np.zeros(I); rt = np.zeros(I)
         wait = np.zeros(I); out_assign = np.zeros(I, np.int64)
+        ttft = np.zeros(I); tpot = np.zeros(I)
         busy = np.zeros(n_nodes)
 
         # events: (time, seq, kind, payload)
@@ -151,6 +180,8 @@ class ClusterSimulator:
                 completion = finish + self.down[i, pair]
                 q[i] = self.quality[i, pair]; cost[i] = self.cost[i, pair]
                 rt[i] = completion - t; wait[i] = start - ready
+                ttft[i] = (start + self.prefill[i, pair]) - t
+                tpot[i] = self.tpot_pair[pair]
                 out_assign[i] = pair; busy[node] += self.service[i, pair]
                 heapq.heappush(heap, (completion, seq, "done", (i, c))); seq += 1
             else:  # done -> client issues its next request
@@ -160,4 +191,4 @@ class ClusterSimulator:
                     seq += 1; issued += 1
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot)

@@ -11,6 +11,15 @@ three objectives (RQ, C, RT) of Eqs. (2)–(4). Two execution models:
   constraint (a policy that floods one node accrues unbounded waits →
   constraint violation via the W_MAX stability bound).
 
+Beyond the paper, the evaluator does **phase-split accounting**: every
+request's response time is decomposed into TTFT (upload + queue wait +
+prefill — time to first token) and TPOT (decode seconds per output token),
+mirroring the prefill/decode split of ``serving.engine``. With per-request
+deadlines attached to the trace (``workload.slo``), ``make_fitness`` can
+expose SLO violation as a fourth objective ("qoe") and ``_run_trace`` can run
+the SLO-aware policy (``policy="slo"``) whose in-scan decisions depend on the
+live queue *and* the request's deadline pair.
+
 Everything static per (trace × cluster) is precomputed into ``EvalTables``
 (I × n_pairs matrices); the jitted scan only resolves queue dynamics, so a
 population×trace evaluation is one fused XLA program:
@@ -18,7 +27,8 @@ population×trace evaluation is one fused XLA program:
     vmap over P policies ∘ lax.scan over I requests ∘ O(n_nodes) queue update
 
 For **threshold genomes** the routing decision (Algorithm 2) happens *inside*
-the scan because it depends on live queue lengths; for **direct genomes** the
+the scan because it depends on live queue lengths; for **slo genomes** the
+decision additionally reads the deadline tables; for **direct genomes** the
 assignment vector is the genome itself.
 """
 from __future__ import annotations
@@ -33,9 +43,12 @@ import numpy as np
 
 from ..cluster.spec import ClusterArrays, ClusterSpec
 from ..workload.trace import Trace
-from .policy import decide_pair_jnp
+from .objectives import aggregate_qoe, slo_ok
+from .policy import decide_pair_jnp, decide_pair_slo_jnp
 
 RESP_BYTES_PER_TOKEN = 4.2  # avg UTF-8 payload bytes per generated token
+
+POLICY_KINDS = ("direct", "threshold", "slo")
 
 
 class EvalTables(NamedTuple):
@@ -46,10 +59,40 @@ class EvalTables(NamedTuple):
     service: jnp.ndarray      # T_infer (prefill + decode)
     up_time: jnp.ndarray      # Q_size/B_up + latency_up
     down_time: jnp.ndarray    # R_size/B_down + latency_down
+    # phase split (QoE accounting)
+    prefill_time: jnp.ndarray  # (I, n_pairs) prompt/prefill_tps
+    tpot: jnp.ndarray          # (n_pairs,) decode seconds per output token
     # per-request features for in-scan routing (threshold policies)
     complexity: jnp.ndarray   # (I,)
     pred_category: jnp.ndarray  # (I,) int32 (0=code, 1=math, 2=general)
     pred_conf: jnp.ndarray    # (I,)
+    # per-request QoE contract (+inf when the trace carries no SLOs)
+    ttft_deadline: jnp.ndarray  # (I,)
+    tpot_deadline: jnp.ndarray  # (I,)
+
+
+def request_pair_estimates(prompt_tokens: float, resp_tokens_mean: float,
+                           query_bytes: float, arrays: ClusterArrays
+                           ) -> dict:
+    """Per-pair phase/cost estimates for ONE request (numpy, router hot path).
+
+    Returns float32 (n_pairs,) vectors ``up``, ``prefill``, ``tpot``,
+    ``cost`` using the same formulas as ``build_tables`` so the runtime
+    router's SLO decisions agree with the offline evaluator.
+    """
+    verb = np.asarray(arrays.pair_verbosity, np.float32)
+    resp_tokens = np.maximum(np.round(np.float32(resp_tokens_mean) * verb), 1.0)
+    price = np.asarray(arrays.pair_price, np.float32)
+    cost = (np.float32(prompt_tokens) + resp_tokens) / 1e6 * price
+    prefill = np.float32(prompt_tokens) / np.asarray(arrays.pair_prefill_tps,
+                                                     np.float32)
+    tpot = np.float32(1.0) / np.asarray(arrays.pair_decode_tps, np.float32)
+    node = np.asarray(arrays.pair_node)
+    up = (np.float32(query_bytes) / np.asarray(arrays.node_bw_up,
+                                               np.float32)[node]
+          + np.asarray(arrays.node_lat_up, np.float32)[node])
+    return {"up": up.astype(np.float32), "prefill": prefill.astype(np.float32),
+            "tpot": tpot.astype(np.float32), "cost": cost.astype(np.float32)}
 
 
 def build_tables(trace: Trace, cluster: ClusterSpec, seed: int = 0
@@ -72,8 +115,10 @@ def build_tables(trace: Trace, cluster: ClusterSpec, seed: int = 0
     total_tokens = prompt[:, None] + resp_tokens
     cost = total_tokens / 1e6 * price[None, :]                     # Eq. 3
 
-    service = (prompt[:, None] / np.asarray(arrays.pair_prefill_tps)[None, :]
-               + resp_tokens / np.asarray(arrays.pair_decode_tps)[None, :])
+    prefill = prompt[:, None] / np.asarray(arrays.pair_prefill_tps)[None, :]
+    decode = resp_tokens / np.asarray(arrays.pair_decode_tps)[None, :]
+    service = prefill + decode
+    tpot = 1.0 / np.asarray(arrays.pair_decode_tps)
 
     node = np.asarray(arrays.pair_node)
     up = (qbytes[:, None] / np.asarray(arrays.node_bw_up)[node][None, :]
@@ -90,15 +135,26 @@ def build_tables(trace: Trace, cluster: ClusterSpec, seed: int = 0
         base_q.T[task, :] + slope[None, :] * (0.5 - difficulty[:, None]) + noise,
         0.0, 1.0)
 
+    if trace.has_slos:
+        ttft_dl = trace.ttft_deadline
+        tpot_dl = trace.tpot_deadline
+    else:
+        ttft_dl = np.full(I, np.inf, np.float32)
+        tpot_dl = np.full(I, np.inf, np.float32)
+
     tables = EvalTables(
         quality=jnp.asarray(quality, jnp.float32),
         cost=jnp.asarray(cost, jnp.float32),
         service=jnp.asarray(service, jnp.float32),
         up_time=jnp.asarray(up, jnp.float32),
         down_time=jnp.asarray(down, jnp.float32),
+        prefill_time=jnp.asarray(prefill, jnp.float32),
+        tpot=jnp.asarray(tpot, jnp.float32),
         complexity=jnp.asarray(trace.complexity, jnp.float32),
         pred_category=jnp.asarray(trace.pred_category, jnp.int32),
         pred_conf=jnp.asarray(trace.pred_conf, jnp.float32),
+        ttft_deadline=jnp.asarray(ttft_dl, jnp.float32),
+        tpot_deadline=jnp.asarray(tpot_dl, jnp.float32),
     )
     return tables, arrays
 
@@ -119,22 +175,21 @@ class EvalResult(NamedTuple):
     rt: jnp.ndarray       # (I,)
     assign: jnp.ndarray   # (I,) chosen pair per request
     violation: jnp.ndarray  # scalar
+    ttft: jnp.ndarray     # (I,) time to first token (up + wait + prefill)
+    tpot: jnp.ndarray     # (I,) decode seconds per output token
 
 
 def _max_conc(arrays: ClusterArrays) -> int:
     return int(np.max(np.asarray(arrays.node_conc)))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_slots"))
-def _run_trace(assign_or_thresholds: jnp.ndarray, is_threshold: bool,
-               tables: EvalTables, arrays: ClusterArrays, cfg: EvalConfig,
+@functools.partial(jax.jit, static_argnames=("policy", "cfg", "n_slots"))
+def _run_trace(genome: jnp.ndarray, policy: str, tables: EvalTables,
+               arrays: ClusterArrays, cfg: EvalConfig,
                n_slots: int) -> EvalResult:
-    del is_threshold  # resolved statically below via ndim
+    assert policy in POLICY_KINDS
     I = tables.quality.shape[0]
-    n_nodes = arrays.n_nodes
     G = cfg.concurrency
-    threshold_mode = assign_or_thresholds.ndim == 1 and \
-        assign_or_thresholds.dtype in (jnp.float32, jnp.float64)
 
     # slot_free[n, s] = time when slot s of node n becomes free;
     # slots beyond a node's concurrency are pinned at +inf (never chosen).
@@ -151,20 +206,29 @@ def _run_trace(assign_or_thresholds: jnp.ndarray, is_threshold: bool,
         busy = jnp.sum(jnp.where(slot_valid, slot_free > arrival, False),
                        axis=1).astype(jnp.int32)
 
-        if threshold_mode:
+        if policy == "threshold":
             pair = decide_pair_jnp(
-                assign_or_thresholds,
+                genome,
                 complexity=tables.complexity[i],
                 pred_category=tables.pred_category[i],
                 pred_conf=tables.pred_conf[i],
                 queue_len=busy, arrays=arrays)
+        elif policy == "slo":
+            pair = decide_pair_slo_jnp(
+                genome,
+                ttft_deadline=tables.ttft_deadline[i],
+                tpot_deadline=tables.tpot_deadline[i],
+                up=tables.up_time[i], prefill=tables.prefill_time[i],
+                tpot=tables.tpot, cost=tables.cost[i],
+                queue_len=busy, arrays=arrays)
         else:
-            pair = assign_or_thresholds[i]
+            pair = genome[i]
 
         node = arrays.pair_node[pair]
         up = tables.up_time[i, pair]
         down = tables.down_time[i, pair]
         service = tables.service[i, pair]
+        prefill = tables.prefill_time[i, pair]
 
         if cfg.mode == "eq5":
             rt = up + service + down                    # Eq. (5) verbatim
@@ -182,15 +246,16 @@ def _run_trace(assign_or_thresholds: jnp.ndarray, is_threshold: bool,
             rt = completion - arrival
             new_slot_free = slot_free.at[node, s].set(finish)
 
+        ttft = up + wait + prefill
         client_ready = client_ready.at[i % G].set(completion)
         out = (tables.quality[i, pair], tables.cost[i, pair], rt, pair,
-               jnp.maximum(wait - cfg.w_max, 0.0))
+               jnp.maximum(wait - cfg.w_max, 0.0), ttft, tables.tpot[pair])
         return (new_slot_free, client_ready), out
 
-    (_, _), (q, cost, rt, assign, excess) = jax.lax.scan(
+    (_, _), (q, cost, rt, assign, excess, ttft, tpot) = jax.lax.scan(
         body, (init_slots, init_clients), jnp.arange(I))
     return EvalResult(q=q, cost=cost, rt=rt, assign=assign,
-                      violation=jnp.sum(excess))
+                      violation=jnp.sum(excess), ttft=ttft, tpot=tpot)
 
 
 class TraceEvaluator:
@@ -206,23 +271,44 @@ class TraceEvaluator:
 
     # -- single policy ------------------------------------------------------
     def run_assignment(self, assign: jnp.ndarray) -> EvalResult:
-        return _run_trace(jnp.asarray(assign, jnp.int32), False, self.tables,
-                          self.arrays, self.cfg, self.n_slots)
+        return _run_trace(jnp.asarray(assign, jnp.int32), "direct",
+                          self.tables, self.arrays, self.cfg, self.n_slots)
 
     def run_thresholds(self, thresholds: jnp.ndarray) -> EvalResult:
-        return _run_trace(jnp.asarray(thresholds, jnp.float32), True,
+        return _run_trace(jnp.asarray(thresholds, jnp.float32), "threshold",
+                          self.tables, self.arrays, self.cfg, self.n_slots)
+
+    def run_slo_policy(self, params: jnp.ndarray) -> EvalResult:
+        """Run the SLO-aware policy (genome = [γ, κ], see core.policy)."""
+        return _run_trace(jnp.asarray(params, jnp.float32), "slo",
                           self.tables, self.arrays, self.cfg, self.n_slots)
 
     # -- population fitness (for NSGA2) --------------------------------------
-    def make_fitness(self, genome: str):
-        """Return FitnessFn mapping (P, D) genomes -> ((P, 3), (P,))."""
+    def make_fitness(self, genome: str, objectives: str = "paper"):
+        """Return FitnessFn mapping (P, D) genomes -> ((P, M), (P,)).
+
+        genome: "continuous" (Algorithm-2 thresholds), "discrete" (direct
+        assignment), or "slo" ([γ, κ] SLO policy). objectives: "paper" for
+        the 3-vector (RQ, C, RT); "qoe" appends the SLO violation rate as a
+        4th minimized objective (requires a trace with deadlines attached).
+        """
+        assert objectives in ("paper", "qoe")
+        assert objectives != "qoe" or self.trace.has_slos, \
+            "qoe objectives need a trace with SLOs (workload.slo.attach_slos)"
+        policy = {"continuous": "threshold", "discrete": "direct",
+                  "slo": "slo"}[genome]
+
         def run_one(g):
-            res = (_run_trace(g, True, self.tables, self.arrays, self.cfg,
-                              self.n_slots) if genome == "continuous"
-                   else _run_trace(g, False, self.tables, self.arrays,
-                                   self.cfg, self.n_slots))
-            F = jnp.stack([jnp.mean(1.0 - res.q), jnp.mean(res.cost),
-                           jnp.mean(res.rt)])
+            g = g if policy == "direct" else g.astype(jnp.float32)
+            res = _run_trace(g, policy, self.tables, self.arrays, self.cfg,
+                             self.n_slots)
+            if objectives == "qoe":
+                F = aggregate_qoe(res.q, res.cost, res.rt, res.ttft, res.tpot,
+                                  self.tables.ttft_deadline,
+                                  self.tables.tpot_deadline).stack()
+            else:
+                F = jnp.stack([jnp.mean(1.0 - res.q), jnp.mean(res.cost),
+                               jnp.mean(res.rt)])
             return F, res.violation
 
         def fitness(genomes, key):
@@ -234,13 +320,20 @@ class TraceEvaluator:
 
     # -- reporting ------------------------------------------------------------
     def summarize(self, res: EvalResult) -> dict:
-        return {
+        out = {
             "avg_quality": float(jnp.mean(res.q)),
             "avg_response_time": float(jnp.mean(res.rt)),
             "avg_cost": float(jnp.mean(res.cost)),
             "RQ": float(jnp.mean(1.0 - res.q)),
             "violation": float(res.violation),
+            "avg_ttft": float(jnp.mean(res.ttft)),
+            "avg_tpot": float(jnp.mean(res.tpot)),
         }
+        if self.trace.has_slos:
+            ok = slo_ok(res.ttft, res.tpot, self.tables.ttft_deadline,
+                        self.tables.tpot_deadline)
+            out["slo_attainment"] = float(jnp.mean(ok.astype(jnp.float32)))
+        return out
 
     def per_dataset_quality(self, res: EvalResult) -> dict:
         from ..cluster.spec import TASKS

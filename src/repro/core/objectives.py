@@ -1,7 +1,16 @@
-"""Objective metrics (paper Eqs. 2–5) and the §V-D composite score.
+"""Objective metrics (paper Eqs. 2–5), the §V-D composite score, and the
+beyond-paper QoE/SLO objectives.
 
 All metrics are computed from per-request vectors produced by the evaluator:
 ``q`` (quality score in [0,1]), ``cost`` ($ per request), ``rt`` (seconds).
+
+The QoE extension splits ``rt`` into its serving phases — ``ttft`` (time to
+first token: upload + queue wait + prefill) and ``tpot`` (decode seconds per
+output token) — and scores a policy by **SLO attainment**: the fraction of
+requests meeting both of their per-request deadlines (see
+``repro.workload.slo``). ``aggregate_qoe`` packs the violation rate as a
+fourth minimized objective so the NSGA-II searches the (quality, cost,
+latency, attainment) space directly.
 """
 from __future__ import annotations
 
@@ -33,6 +42,42 @@ def weighted_scalar(obj: Objectives, weights: Sequence[float],
     hi = jnp.asarray(norm_hi)
     fn = (f - lo) / jnp.where(hi - lo <= 0, 1.0, hi - lo)
     return jnp.dot(jnp.asarray(weights), fn)
+
+
+class QoEObjectives(NamedTuple):
+    """Paper objectives + SLO violation rate (all minimized)."""
+
+    RQ: jnp.ndarray   # Eq. 2: mean(1 - q)
+    C: jnp.ndarray    # Eq. 3: mean cost
+    RT: jnp.ndarray   # Eq. 4: mean latency
+    V: jnp.ndarray    # 1 - SLO attainment (fraction missing a deadline)
+
+    def stack(self) -> jnp.ndarray:
+        return jnp.stack([self.RQ, self.C, self.RT, self.V])
+
+
+def slo_ok(ttft: jnp.ndarray, tpot: jnp.ndarray,
+           ttft_deadline: jnp.ndarray, tpot_deadline: jnp.ndarray
+           ) -> jnp.ndarray:
+    """(I,) bool — request met BOTH phase deadlines."""
+    return (ttft <= ttft_deadline) & (tpot <= tpot_deadline)
+
+
+def slo_attainment(ttft: jnp.ndarray, tpot: jnp.ndarray,
+                   ttft_deadline: jnp.ndarray, tpot_deadline: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Fraction of requests meeting both TTFT and TPOT deadlines."""
+    return jnp.mean(slo_ok(ttft, tpot, ttft_deadline, tpot_deadline)
+                    .astype(jnp.float32))
+
+
+def aggregate_qoe(q: jnp.ndarray, cost: jnp.ndarray, rt: jnp.ndarray,
+                  ttft: jnp.ndarray, tpot: jnp.ndarray,
+                  ttft_deadline: jnp.ndarray, tpot_deadline: jnp.ndarray
+                  ) -> QoEObjectives:
+    att = slo_attainment(ttft, tpot, ttft_deadline, tpot_deadline)
+    return QoEObjectives(RQ=jnp.mean(1.0 - q), C=jnp.mean(cost),
+                         RT=jnp.mean(rt), V=1.0 - att)
 
 
 def overall_scores(avg_quality: np.ndarray, avg_rt: np.ndarray,

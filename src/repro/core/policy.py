@@ -9,6 +9,17 @@ Genome layout (6 decision variables, all continuous):
 and by the serving scheduler; ``decide_pair_py`` is a line-by-line Python
 transcription of Algorithm 2 used as the test oracle.
 
+Beyond Algorithm 2, this module hosts the **SLO-aware decision mode**
+(``decide_pair_slo_jnp`` / ``decide_pair_slo_py``): instead of difficulty
+thresholds it estimates each pair's TTFT (upload + predicted queue wait +
+prefill) and TPOT against the request's phase deadlines and picks the
+*cheapest feasible* pair — deadline-tight requests therefore land on
+low-queue/cloud pairs while relaxed ones ride cheap edge pairs. Its genome is
+
+    [γ (deadline headroom, <1 = conservative), κ (est. wait s per unit load)]
+
+searchable by the same NSGA-II via ``TraceEvaluator.make_fitness("slo")``.
+
 Category encoding follows workload.classifier.CATEGORIES:
 0 = 'code', 1 = 'math', 2 = 'general'. Model types follow
 cluster.spec.MODEL_TYPES: 0 = 'instruct', 1 = 'coder', 2 = 'math',
@@ -128,3 +139,83 @@ def decide_pair_py(genome: Sequence[float], *, complexity: float,
         if queue_len[pair_node[pair]] <= th_q:
             return int(pair)
     return fallback
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware decision mode (QoE extension)
+# ---------------------------------------------------------------------------
+SLO_PARAM_NAMES = ("gamma", "kappa")
+
+# γ in [0.3, 1.1] (fraction of the deadline budget the estimate may use),
+# κ in [0, 20] s of predicted wait at full load.
+SLO_BOUNDS_LO = np.array([0.3, 0.0], np.float32)
+SLO_BOUNDS_HI = np.array([1.1, 20.0], np.float32)
+
+# sensible hand defaults: 10% headroom, ~3 s wait at a saturated node
+SLO_DEFAULTS = np.array([0.9, 3.0], np.float32)
+
+
+def _slo_scores_np(genome, ttft_deadline, tpot_deadline, up, prefill, tpot,
+                   cost, queue_len, node, conc):
+    """Shared float32 arithmetic for the numpy oracle (mirrors the jnp path
+    op-for-op so argmin tie-breaking is identical)."""
+    gamma = np.float32(genome[0])
+    kappa = np.float32(genome[1])
+    load = queue_len.astype(np.float32) / conc.astype(np.float32)
+    est_wait = kappa * load[node]
+    est_ttft = up + est_wait + prefill
+    # γ headroom hedges the *uncertain* TTFT estimate; TPOT is a known
+    # constant per pair, so γ > 1 must not admit guaranteed TPOT misses
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= np.minimum(gamma, np.float32(1.0)) * tpot_deadline)
+    overshoot = np.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    return feasible, est_ttft, overshoot
+
+
+def decide_pair_slo_jnp(genome: jnp.ndarray, *, ttft_deadline: jnp.ndarray,
+                        tpot_deadline: jnp.ndarray, up: jnp.ndarray,
+                        prefill: jnp.ndarray, tpot: jnp.ndarray,
+                        cost: jnp.ndarray, queue_len: jnp.ndarray,
+                        arrays: ClusterArrays) -> jnp.ndarray:
+    """SLO-aware routing: cheapest pair whose estimated phase times fit the
+    deadline budget scaled by γ; if no pair is feasible, minimize the worst
+    normalized deadline overshoot (degrades gracefully toward fast pairs).
+
+    ``up``/``prefill``/``cost`` are this request's (n_pairs,) rows of the
+    precomputed tables; ``tpot`` is the per-pair decode time (n_pairs,);
+    ``queue_len`` is the (n_nodes,) busy-slot view from the monitor.
+    """
+    gamma = genome[0]
+    kappa = genome[1]
+    load = queue_len.astype(jnp.float32) / arrays.node_conc.astype(jnp.float32)
+    est_wait = kappa * load[arrays.pair_node]
+    est_ttft = up + est_wait + prefill
+    # γ headroom applies to the uncertain TTFT estimate only; the TPOT term
+    # clamps γ at 1 so a searchable γ > 1 cannot admit certain TPOT misses
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= jnp.minimum(gamma, 1.0) * tpot_deadline)
+    any_ok = jnp.any(feasible)
+    cheapest = jnp.argmin(jnp.where(feasible, cost, jnp.inf))
+    overshoot = jnp.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    least_bad = jnp.argmin(overshoot)
+    return jnp.where(any_ok, cheapest, least_bad).astype(jnp.int32)
+
+
+def decide_pair_slo_py(genome: Sequence[float], *, ttft_deadline: float,
+                       tpot_deadline: float, up: np.ndarray,
+                       prefill: np.ndarray, tpot: np.ndarray,
+                       cost: np.ndarray, queue_len: Sequence[int],
+                       arrays: ClusterArrays) -> int:
+    """Reference numpy transcription of the SLO decision (test oracle)."""
+    node = np.asarray(arrays.pair_node)
+    conc = np.asarray(arrays.node_conc)
+    feasible, est_ttft, overshoot = _slo_scores_np(
+        np.asarray(genome, np.float32),
+        np.float32(ttft_deadline), np.float32(tpot_deadline),
+        np.asarray(up, np.float32), np.asarray(prefill, np.float32),
+        np.asarray(tpot, np.float32), np.asarray(cost, np.float32),
+        np.asarray(queue_len), node, conc)
+    if feasible.any():
+        return int(np.argmin(np.where(feasible, np.asarray(cost, np.float32),
+                                      np.inf)))
+    return int(np.argmin(overshoot))

@@ -14,6 +14,15 @@ fault-aware:
 * **re-optimization** — ``maybe_reoptimize`` re-runs a small NSGA-II against
   the latest observed trace window, implementing the paper's "small-scale
   NSGA-II re-optimization triggered periodically".
+
+Two decision modes (``mode=``):
+
+* ``"threshold"`` — the paper's Algorithm 2 over difficulty/queue/confidence
+  thresholds;
+* ``"slo"`` — QoE-aware phase-split routing: estimates each pair's TTFT and
+  TPOT against the request's (per-category or explicit) deadlines and picks
+  the cheapest feasible pair (see ``core.policy.decide_pair_slo_py`` and
+  ``workload.slo``).
 """
 from __future__ import annotations
 
@@ -30,7 +39,9 @@ from ..cluster.spec import ClusterArrays, ClusterSpec
 from ..workload.classifier import classify
 from ..workload.datasets import Request
 from ..workload.features import complexity_score
-from .policy import decide_pair_py
+from ..workload.slo import DEFAULT_SLO_TABLE, slo_arrays
+from .fitness import request_pair_estimates
+from .policy import SLO_DEFAULTS, decide_pair_py, decide_pair_slo_py
 
 
 @dataclasses.dataclass
@@ -46,19 +57,33 @@ class RouteDecision:
 class RequestRouter:
     def __init__(self, cluster: ClusterSpec, thresholds: Sequence[float],
                  monitor: Optional[ClusterMonitor] = None,
-                 hedge_factor: float = 3.0):
+                 hedge_factor: float = 3.0, mode: str = "threshold",
+                 slo_params: Optional[Sequence[float]] = None,
+                 slo_table=DEFAULT_SLO_TABLE):
+        assert mode in ("threshold", "slo")
         self.cluster = cluster
         self.arrays: ClusterArrays = cluster.to_arrays()
         self.thresholds = np.asarray(thresholds, np.float32)
+        self.mode = mode
+        self.slo_params = np.asarray(
+            SLO_DEFAULTS if slo_params is None else slo_params, np.float32)
+        self._slo_ttft, self._slo_tpot = slo_arrays(slo_table)
         self.monitor = monitor or ClusterMonitor(len(cluster.nodes))
         self.hedge_factor = hedge_factor
         self._rng = np.random.default_rng(0)
-        self._pair_node = np.asarray(self.arrays.pair_node)
-        self._pair_is_edge = np.asarray(self.arrays.pair_is_edge)
+        # numpy view of the pair table, converted once: the per-request hot
+        # path must not pay device-to-host transfers on every decision
+        self._np_arrays = ClusterArrays(*(np.asarray(a) for a in self.arrays))
+        self._pair_node = self._np_arrays.pair_node
+        self._pair_is_edge = self._np_arrays.pair_is_edge
         self._history: list = []   # (features, realized objectives) window
 
     # -- hot path -------------------------------------------------------------
-    def route(self, req: Request, want_backup: bool = False) -> RouteDecision:
+    def route(self, req: Request, want_backup: bool = False,
+              ttft_deadline: Optional[float] = None,
+              tpot_deadline: Optional[float] = None) -> RouteDecision:
+        """Route one request. In ``slo`` mode explicit per-request deadlines
+        override the per-category SLO table defaults."""
         pred_cat, conf = classify(req, self._rng)
         c_i = complexity_score(req, pred_cat)
         queue = self.monitor.queue_lengths()
@@ -68,9 +93,27 @@ class RequestRouter:
         masked_queue = [q if healthy[j] else 10 ** 6
                         for j, q in enumerate(queue)]
 
-        pair = decide_pair_py(self.thresholds, complexity=c_i,
-                              pred_category=pred_cat, pred_conf=conf,
-                              queue_len=masked_queue, arrays=self.arrays)
+        if self.mode == "slo":
+            est = request_pair_estimates(req.prompt_tokens,
+                                         req.resp_tokens_mean,
+                                         req.query_bytes, self._np_arrays)
+            # unhealthy nodes: push their pairs out of feasibility
+            dead = ~np.asarray(healthy)[self._pair_node]
+            up = np.where(dead, np.float32(1e9), est["up"])
+            pair = decide_pair_slo_py(
+                self.slo_params,
+                ttft_deadline=(ttft_deadline if ttft_deadline is not None
+                               else float(self._slo_ttft[pred_cat])),
+                tpot_deadline=(tpot_deadline if tpot_deadline is not None
+                               else float(self._slo_tpot[pred_cat])),
+                up=up, prefill=est["prefill"], tpot=est["tpot"],
+                cost=est["cost"], queue_len=masked_queue,
+                arrays=self._np_arrays)
+        else:
+            pair = decide_pair_py(self.thresholds, complexity=c_i,
+                                  pred_category=pred_cat, pred_conf=conf,
+                                  queue_len=masked_queue,
+                                  arrays=self._np_arrays)
         node = int(self._pair_node[pair])
 
         # failover: if Algorithm 2 returned a pair on a dead node (e.g. the
@@ -91,7 +134,7 @@ class RequestRouter:
             backup = self.backup_pair(pair)
         return RouteDecision(
             pair=int(pair), node=node,
-            model=int(np.asarray(self.arrays.pair_model)[pair]),
+            model=int(self._np_arrays.pair_model[pair]),
             go_edge=bool(self._pair_is_edge[pair]),
             features=(c_i, pred_cat, conf), backup_pair=backup)
 

@@ -16,6 +16,13 @@ fixed slot pool:
 The engine is exact: admission uses the same ``lm.prefill`` the tests
 validate against teacher forcing, so a routed request's tokens are identical
 to an offline forward pass.
+
+Each result carries **QoE phase accounting** in engine-step units (the
+discrete clock advanced by ``step``): ``submit_step``/``first_token_step``/
+``finish_step`` timestamps plus the derived ``ttft_steps`` (queue wait until
+the prefill emits the first token) and ``tpot_steps`` (decode iterations per
+generated token after the first). These are the serving-layer ground truth
+the analytical TTFT/TPOT tables in ``core.fitness`` model.
 """
 from __future__ import annotations
 
@@ -45,6 +52,8 @@ class _Slot:
     request_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     budget: int = 0
+    submit_step: int = 0       # engine step at submit()
+    first_token_step: int = 0  # engine step when prefill emitted token 0
 
 
 class LLMEngine:
@@ -68,7 +77,7 @@ class LLMEngine:
                extra: Optional[dict] = None) -> None:
         self.queue.append((request_id, np.asarray(tokens, np.int32),
                            max_new_tokens or self.ecfg.max_new_tokens,
-                           extra or {}))
+                           extra or {}, self._steps))
         self._admit()
 
     def step(self) -> List[int]:
@@ -88,9 +97,7 @@ class LLMEngine:
             s.generated.append(tok)
             s.budget -= 1
             if s.budget <= 0 or tok == self.ecfg.eos_token:
-                self.results[s.request_id] = {
-                    "tokens": list(s.generated),
-                    "n_steps": len(s.generated)}
+                self.results[s.request_id] = self._result(s, self._steps + 1)
                 retired.append(s.request_id)
                 self.slots[i] = _Slot()
         self._steps += 1
@@ -117,17 +124,39 @@ class LLMEngine:
         return self.active_count + len(self.queue)
 
     # -- internals -------------------------------------------------------------
+    def _result(self, s: "_Slot", finish_step: int) -> dict:
+        n_decode = max(len(s.generated) - 1, 0)  # token 0 comes from prefill
+        return {
+            "tokens": list(s.generated),
+            "n_steps": len(s.generated),
+            "submit_step": s.submit_step,
+            "first_token_step": s.first_token_step,
+            "finish_step": finish_step,
+            "ttft_steps": s.first_token_step - s.submit_step,
+            "tpot_steps": ((finish_step - s.first_token_step) / n_decode
+                           if n_decode else 0.0),
+        }
+
+    def qoe_summary(self) -> dict:
+        """Mean phase timings (in engine steps) over completed requests."""
+        if not self.results:
+            return {"avg_ttft_steps": 0.0, "avg_tpot_steps": 0.0}
+        rs = list(self.results.values())
+        return {"avg_ttft_steps": float(np.mean([r["ttft_steps"] for r in rs])),
+                "avg_tpot_steps": float(np.mean([r["tpot_steps"] for r in rs]))}
+
     def _admit(self):
         while self.queue:
             free = [i for i, s in enumerate(self.slots) if s.request_id is None]
             if not free:
                 return
             i = free[0]
-            request_id, tokens, budget, extra = self.queue.popleft()
-            self._prefill_into(i, request_id, tokens, budget, extra)
+            request_id, tokens, budget, extra, submit_step = self.queue.popleft()
+            self._prefill_into(i, request_id, tokens, budget, extra,
+                               submit_step)
 
     def _prefill_into(self, slot: int, request_id: int, tokens: np.ndarray,
-                      budget: int, extra: dict):
+                      budget: int, extra: dict, submit_step: int = 0):
         e = self.ecfg
         L = len(tokens)
         assert L + budget <= e.max_seq, "request exceeds engine max_seq"
@@ -162,8 +191,9 @@ class LLMEngine:
         s.request_id = request_id
         s.generated = [first]
         s.budget = budget - 1
+        s.submit_step = submit_step
+        s.first_token_step = self._steps
         self._next_token = self._next_token.at[slot, 0].set(first)
         if s.budget <= 0:
-            self.results[request_id] = {"tokens": list(s.generated),
-                                        "n_steps": 1}
+            self.results[request_id] = self._result(s, self._steps)
             self.slots[slot] = _Slot()

@@ -11,7 +11,7 @@ and the discrete-event simulator. Everything is deterministic given ``seed``.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -36,10 +36,18 @@ class Trace:
     resp_tokens_mean: np.ndarray  # (I,) float32
     difficulty: np.ndarray      # (I,) float32 latent
     query_bytes: np.ndarray     # (I,) float32
+    # Optional QoE contract (see workload.slo.attach_slos). None = no SLOs.
+    ttft_deadline: Optional[np.ndarray] = None   # (I,) float32 seconds
+    tpot_deadline: Optional[np.ndarray] = None   # (I,) float32 s/token
+    slo_interactive: Optional[np.ndarray] = None  # (I,) bool deadline class
 
     @property
     def n_requests(self) -> int:
         return self.task.shape[0]
+
+    @property
+    def has_slos(self) -> bool:
+        return self.ttft_deadline is not None and self.tpot_deadline is not None
 
 
 def build_trace(n_requests: int = 500, seed: int = 0) -> Trace:

@@ -1,0 +1,34 @@
+"""Docs checks: the architecture doc must mention every src/repro package,
+and the README must carry the quickstart + tier-1 commands. CI runs these on
+every push (.github/workflows/ci.yml) so docs cannot silently rot."""
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _packages():
+    src = REPO / "src" / "repro"
+    return sorted(p.name for p in src.iterdir()
+                  if p.is_dir() and (p / "__init__.py").exists())
+
+
+def test_architecture_doc_mentions_every_package():
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    missing = [pkg for pkg in _packages()
+               if f"repro.{pkg}" not in doc and f"repro/{pkg}" not in doc]
+    assert not missing, f"docs/architecture.md misses packages: {missing}"
+
+
+def test_readme_has_quickstart_and_tier1_command():
+    readme = (REPO / "README.md").read_text()
+    assert "examples/quickstart.py" in readme
+    assert "python -m pytest -x -q" in readme
+    assert "benchmarks" in readme
+
+
+def test_benchmarks_readme_covers_every_module():
+    doc = (REPO / "benchmarks" / "README.md").read_text()
+    mods = [p.stem for p in (REPO / "benchmarks").glob("*.py")
+            if p.stem not in ("common", "run", "__init__")]
+    missing = [m for m in mods if f"{m}.py" not in doc]
+    assert not missing, f"benchmarks/README.md misses: {missing}"
