@@ -47,7 +47,9 @@ def _flatten(tree, prefix=""):
     if isinstance(tree, dict):
         for k in sorted(tree):
             yield from _flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
-    elif isinstance(tree, (list, tuple)):
+    # PartitionSpec subclasses tuple on some jax versions: it is a leaf, not
+    # a container (recursing into it shreds specs into None/str fragments)
+    elif isinstance(tree, (list, tuple)) and not isinstance(tree, P):
         for i, v in enumerate(tree):
             yield from _flatten(v, f"{prefix}{_SEP}{i}")
     else:

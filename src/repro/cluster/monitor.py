@@ -3,8 +3,21 @@ module"; §VI future work: "real-time monitoring mechanisms for node and model
 status, coupled with fault-tolerant strategies").
 
 Tracks, per node: outstanding request count (the q_j feature), health state
-with heartbeat expiry, and EWMA latency per (node, model) used for straggler
-detection (hedging threshold) by the serving scheduler.
+with heartbeat expiry, and EWMA latency per node used for straggler detection
+(hedging threshold) by the serving scheduler.
+
+Beyond that, the monitor is the **drift sensor** for the rolling-horizon
+re-optimization loop (``core.router.maybe_reoptimize``): each completion
+updates a fast and a slow EWMA of observed latency; a sustained gap between
+them means the workload/queueing regime has shifted away from the window the
+current policy was optimized on, and :meth:`drift_score` quantifies that
+shift as a relative latency change (0 = stationary).
+
+Clock discipline: every method that touches time takes an explicit ``now`` so
+the same code runs under the discrete-event simulator (simulated seconds or
+scheduler ticks) and in wall-clock serving. Heartbeats are initialized to the
+construction time — a node that has *never* heartbeated is not considered
+stale until a full ``heartbeat_timeout`` has elapsed since construction.
 """
 from __future__ import annotations
 
@@ -19,18 +32,26 @@ class NodeStats:
     total_dispatched: int = 0
     total_completed: int = 0
     total_failed: int = 0
+    total_cancelled: int = 0
     healthy: bool = True
     last_heartbeat: float = 0.0
     ewma_latency: float = 0.0
     ewma_alpha: float = 0.2
+    # drift sensing: fast tracker vs slow baseline of the same signal
+    ewma_fast: float = 0.0
+    ewma_slow: float = 0.0
+    alpha_fast: float = 0.3
+    alpha_slow: float = 0.03
 
 
 class ClusterMonitor:
     """Thread-light monitor; all methods take an explicit ``now`` so the same
     code runs under the discrete-event simulator and in wall-clock serving."""
 
-    def __init__(self, n_nodes: int, heartbeat_timeout: float = 10.0):
-        self.stats: Dict[int, NodeStats] = {j: NodeStats() for j in range(n_nodes)}
+    def __init__(self, n_nodes: int, heartbeat_timeout: float = 10.0,
+                 now: float = 0.0):
+        self.stats: Dict[int, NodeStats] = {
+            j: NodeStats(last_heartbeat=now) for j in range(n_nodes)}
         self.heartbeat_timeout = heartbeat_timeout
 
     # -- data plane callbacks -------------------------------------------------
@@ -45,11 +66,22 @@ class ClusterMonitor:
         s.total_completed += 1
         s.ewma_latency = (s.ewma_alpha * latency
                           + (1 - s.ewma_alpha) * (s.ewma_latency or latency))
+        s.ewma_fast = (s.alpha_fast * latency
+                       + (1 - s.alpha_fast) * (s.ewma_fast or latency))
+        s.ewma_slow = (s.alpha_slow * latency
+                       + (1 - s.alpha_slow) * (s.ewma_slow or latency))
 
     def on_failure(self, node: int) -> None:
         s = self.stats[node]
         s.outstanding = max(0, s.outstanding - 1)
         s.total_failed += 1
+
+    def on_cancel(self, node: int) -> None:
+        """A dispatched request was cancelled (e.g. a hedged duplicate lost
+        the race): close its accounting without counting it as served."""
+        s = self.stats[node]
+        s.outstanding = max(0, s.outstanding - 1)
+        s.total_cancelled += 1
 
     def heartbeat(self, node: int, now: Optional[float] = None) -> None:
         s = self.stats[node]
@@ -76,3 +108,27 @@ class ClusterMonitor:
         """Hedge a request if it exceeds factor × EWMA latency of its node."""
         base = self.stats[node].ewma_latency
         return factor * base if base > 0 else float("inf")
+
+    def drift_score(self) -> float:
+        """Max over nodes of the relative fast-vs-slow EWMA latency gap.
+
+        ~0 while the workload is stationary; grows toward |Δ|/baseline when
+        recent latencies diverge from the long-run level (arrival burst, mix
+        shift, slow node). The router's re-optimization trigger compares this
+        against a threshold (see ``RequestRouter.should_reoptimize``).
+        """
+        score = 0.0
+        for s in self.stats.values():
+            if s.ewma_slow > 0:
+                score = max(score,
+                            abs(s.ewma_fast - s.ewma_slow) / s.ewma_slow)
+        return score
+
+    def rebaseline_drift(self) -> None:
+        """Re-arm the drift detector: snap the slow baseline to the current
+        fast tracker. Called after a re-optimization installs a new policy,
+        so one regime shift triggers one re-fit instead of firing on every
+        subsequent check until the slow EWMA reconverges (~1/alpha_slow
+        completions)."""
+        for s in self.stats.values():
+            s.ewma_slow = s.ewma_fast

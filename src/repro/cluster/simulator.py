@@ -59,7 +59,8 @@ class SimResult:
 
 
 class ClusterSimulator:
-    """Closed-loop trace execution with G clients and per-node slots."""
+    """Trace execution with per-node slots: closed-loop (G clients) or
+    open-loop (requests released at explicit ``arrivals`` timestamps)."""
 
     def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0):
         self.trace = trace
@@ -81,19 +82,32 @@ class ClusterSimulator:
 
     def run(self, assign: Sequence[int], concurrency: int = 1,
             down_nodes: Optional[Dict[int, Tuple[float, float]]] = None,
-            on_failure: Optional[Callable[[int, int], int]] = None
-            ) -> SimResult:
+            on_failure: Optional[Callable[[int, int], int]] = None,
+            arrivals: Optional[Sequence[float]] = None) -> SimResult:
         """Execute the trace under assignment ``assign``.
 
         down_nodes: {node: (t_down, t_up)} crash windows. A request dispatched
         to a crashed node invokes ``on_failure(request, node) -> new_pair``
         (default: retry on the cloud fallback), modeling the reroute-on-
         failure behaviour of the runtime router.
+
+        arrivals: optional (I,) sorted timestamps — **open-loop** mode:
+        request i enters the system at ``arrivals[i]`` regardless of earlier
+        completions (``concurrency`` is ignored; node capacity still queues).
+        Defaults to the trace's own ``arrival_time`` when it carries one.
         """
         I = self.trace.n_requests
         G = concurrency
         n_nodes = len(self.cluster.nodes)
         down_nodes = down_nodes or {}
+        if arrivals is None and self.trace.has_arrivals:
+            arrivals = self.trace.arrival_time
+        if arrivals is not None:
+            arrivals = np.asarray(arrivals, np.float64)
+            assert arrivals.shape == (I,)
+            # index order must equal time order or this loop oracle would
+            # silently disagree with the event-heap oracle
+            assert (np.diff(arrivals) >= 0).all(), "arrivals must be sorted"
 
         # slot free-times per node (the capacity C_j resource)
         slots: List[List[float]] = [
@@ -111,7 +125,8 @@ class ClusterSimulator:
 
         for i in range(I):
             c = i % G
-            arrival = client_ready[c]
+            arrival = (float(arrivals[i]) if arrivals is not None
+                       else client_ready[c])
             pair = int(assign[i])
             node = int(self.pair_node[pair])
 
@@ -144,13 +159,18 @@ class ClusterSimulator:
                          node_busy_time=busy, ttft=ttft, tpot=tpot)
 
     # -- event-heap variant -------------------------------------------------
-    def run_event_heap(self, assign: Sequence[int], concurrency: int = 1
+    def run_event_heap(self, assign: Sequence[int], concurrency: int = 1,
+                       arrivals: Optional[Sequence[float]] = None
                        ) -> SimResult:
         """Same semantics via an explicit event heap (belt-and-braces oracle:
-        two independent queueing implementations must agree)."""
+        two independent queueing implementations must agree). With
+        ``arrivals`` (or a trace carrying ``arrival_time``) every request's
+        issue event is scheduled at its own timestamp — open-loop mode."""
         I = self.trace.n_requests
         G = concurrency
         n_nodes = len(self.cluster.nodes)
+        if arrivals is None and self.trace.has_arrivals:
+            arrivals = self.trace.arrival_time
 
         q = np.zeros(I); cost = np.zeros(I); rt = np.zeros(I)
         wait = np.zeros(I); out_assign = np.zeros(I, np.int64)
@@ -162,10 +182,19 @@ class ClusterSimulator:
         seq = 0
         node_free: List[List[float]] = [
             [0.0] * int(self.node_conc[n]) for n in range(n_nodes)]
-        next_req = [c for c in range(min(G, I))]
-        for c, i in enumerate(next_req):
-            heapq.heappush(heap, (0.0, seq, "issue", (i, c))); seq += 1
-        issued = min(G, I)
+        if arrivals is not None:
+            arrivals = np.asarray(arrivals, np.float64)
+            assert arrivals.shape == (I,)
+            assert (np.diff(arrivals) >= 0).all(), "arrivals must be sorted"
+            for i in range(I):
+                heapq.heappush(heap, (float(arrivals[i]), seq, "issue",
+                                      (i, None))); seq += 1
+            issued = I
+        else:
+            next_req = [c for c in range(min(G, I))]
+            for c, i in enumerate(next_req):
+                heapq.heappush(heap, (0.0, seq, "issue", (i, c))); seq += 1
+            issued = min(G, I)
 
         while heap:
             t, _, kind, payload = heapq.heappop(heap)
@@ -184,9 +213,9 @@ class ClusterSimulator:
                 tpot[i] = self.tpot_pair[pair]
                 out_assign[i] = pair; busy[node] += self.service[i, pair]
                 heapq.heappush(heap, (completion, seq, "done", (i, c))); seq += 1
-            else:  # done -> client issues its next request
+            else:  # done -> closed-loop client issues its next request
                 _, c = payload
-                if issued < I:
+                if c is not None and issued < I:
                     heapq.heappush(heap, (t, seq, "issue", (issued, c)))
                     seq += 1; issued += 1
 

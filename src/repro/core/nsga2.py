@@ -48,14 +48,27 @@ class NSGA2Config:
     eta_crossover: float = 15.0
     eta_mutation: float = 20.0
     genome: str = "continuous"  # "continuous" | "discrete"
-    # continuous bounds (D,) arrays; discrete cardinality
+    # continuous bounds (D,) arrays; discrete cardinality + genome length
     lo: Optional[jnp.ndarray] = None
     hi: Optional[jnp.ndarray] = None
     n_choices: int = 0
+    # number of genes D for the default *discrete* init (e.g. n_requests for
+    # direct-assignment genomes); continuous genomes take D from lo/hi
+    genome_length: int = 0
 
     def __post_init__(self):
         assert self.pop_size % 2 == 0, "pop_size must be even"
         assert self.genome in ("continuous", "discrete")
+
+    @property
+    def n_genes(self) -> int:
+        """Genome dimensionality D implied by the config."""
+        if self.genome == "continuous":
+            assert self.lo is not None, "continuous genome requires bounds"
+            return int(self.lo.shape[0])
+        assert self.genome_length > 0, \
+            "discrete genome requires genome_length (or a custom init_fn)"
+        return self.genome_length
 
 
 class NSGA2State(NamedTuple):
@@ -141,6 +154,40 @@ def reassignment_mutation(key: jax.Array, x: jax.Array, pm: float,
 
 
 # ---------------------------------------------------------------------------
+# Warm start
+# ---------------------------------------------------------------------------
+
+def archive_init(archive: jax.Array, cfg: NSGA2Config
+                 ) -> Callable[[jax.Array], jax.Array]:
+    """``init_fn`` seeding a population from an elite archive (warm start).
+
+    The first ``min(len(archive), pop_size)`` individuals are copied from the
+    archive (a previous run's survival-ordered population or Pareto front —
+    ``NSGA2State.genomes`` rows are already sorted best-first by
+    (rank, -crowding)); the remainder is drawn from the default random init
+    so the restarted search keeps exploring. Used by the rolling-horizon
+    router re-optimization to carry the front across workload windows.
+    """
+    archive = jnp.asarray(archive)
+    assert archive.ndim == 2, "archive must be (A, D) genomes"
+    n_seed = min(archive.shape[0], cfg.pop_size)
+
+    def init_fn(key: jax.Array) -> jax.Array:
+        if cfg.genome == "continuous":
+            u = jax.random.uniform(key, (cfg.pop_size, cfg.n_genes))
+            fresh = cfg.lo + u * (cfg.hi - cfg.lo)
+            seeds = jnp.clip(archive[:n_seed].astype(fresh.dtype),
+                             cfg.lo, cfg.hi)
+        else:
+            fresh = jax.random.randint(key, (cfg.pop_size, cfg.n_genes), 0,
+                                       cfg.n_choices, dtype=jnp.int32)
+            seeds = archive[:n_seed].astype(jnp.int32)
+        return fresh.at[:n_seed].set(seeds)
+
+    return init_fn
+
+
+# ---------------------------------------------------------------------------
 # Selection / survival
 # ---------------------------------------------------------------------------
 
@@ -154,10 +201,16 @@ def binary_tournament(key: jax.Array, rank: jax.Array, crowd: jax.Array,
     return jnp.where(a_better, a, b)
 
 
-def survival_select(F: jax.Array, P: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def survival_select(F: jax.Array, P: int,
+                    dominance_fn: Optional[Callable[[jax.Array], jax.Array]]
+                    = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Elitist (μ+λ) truncation: top-P of combined population by
-    (rank asc, crowding desc). Returns (indices, rank_sel, crowd_sel)."""
-    rank = non_dominated_sort(F)
+    (rank asc, crowding desc). Returns (indices, rank_sel, crowd_sel).
+
+    ``dominance_fn`` optionally computes the (2P, 2P) dominance matrix fed to
+    the sort (e.g. the Pallas kernel); default is the jnp reference."""
+    dom = dominance_fn(F) if dominance_fn is not None else None
+    rank = non_dominated_sort(F, dom)
     crowd = crowding_distance(F, rank)
     # lexsort: primary rank asc, secondary crowd desc. Replace inf for sort
     # stability under -crowd (−inf sorts first which is what we want).
@@ -182,7 +235,12 @@ class NSGA2:
     config : NSGA2Config
     init_fn : optional custom population initializer (key) -> (P, D) genomes.
         Defaults to uniform in bounds / uniform categorical. The paper's
-        heuristic-biased init for direct genomes lives in core.fitness.
+        heuristic-biased init for direct genomes lives in core.fitness;
+        warm-starting from a previous run's front uses :func:`archive_init`.
+    use_pallas_dominance : compute the survival-selection dominance matrix
+        with the Pallas kernel (``repro.kernels.dominance``) — native on TPU,
+        interpreter mode elsewhere (CPU tests); semantics are identical to
+        the jnp reference (parity-tested in tests/test_nsga2.py).
     """
 
     def __init__(self, fitness_fn: FitnessFn, config: NSGA2Config,
@@ -192,6 +250,12 @@ class NSGA2:
         self.config = config
         self.init_fn = init_fn
         self.use_pallas_dominance = use_pallas_dominance
+        self._dominance_fn = None
+        if use_pallas_dominance:
+            from ..kernels.dominance import dominance_matrix_pallas
+            interpret = jax.default_backend() != "tpu"
+            self._dominance_fn = lambda F: dominance_matrix_pallas(
+                F, interpret=interpret).astype(bool)
         self._step = jax.jit(self._step_impl)
 
     # -- init ---------------------------------------------------------------
@@ -208,10 +272,13 @@ class NSGA2:
             if cfg.n_choices <= 0:
                 raise ValueError("discrete genome requires init_fn or n_choices>0")
             genomes = jax.random.randint(
-                k_pop, (cfg.pop_size, 1), 0, cfg.n_choices, dtype=jnp.int32)
+                k_pop, (cfg.pop_size, cfg.n_genes), 0, cfg.n_choices,
+                dtype=jnp.int32)
         F_raw, violation = self.fitness_fn(genomes, k_fit)
         F = _penalize(F_raw, violation)
-        rank = non_dominated_sort(F)
+        dom = (self._dominance_fn(F) if self._dominance_fn is not None
+               else None)
+        rank = non_dominated_sort(F, dom)
         crowd = crowding_distance(F, rank)
         return NSGA2State(genomes, F, F_raw, violation, rank, crowd, k_next,
                           jnp.int32(0))
@@ -246,7 +313,8 @@ class NSGA2:
         F_all = jnp.concatenate([state.F, F_off], axis=0)
         F_raw_all = jnp.concatenate([state.F_raw, F_off_raw], axis=0)
         viol_all = jnp.concatenate([state.violation, viol_off], axis=0)
-        sel, rank_sel, crowd_sel = survival_select(F_all, P)
+        sel, rank_sel, crowd_sel = survival_select(F_all, P,
+                                                   self._dominance_fn)
 
         return NSGA2State(
             genomes=genomes_all[sel], F=F_all[sel], F_raw=F_raw_all[sel],

@@ -42,16 +42,21 @@ def pareto_mask(F: jax.Array) -> jax.Array:
     return ~jnp.any(dom, axis=0)
 
 
-def non_dominated_sort(F: jax.Array) -> jax.Array:
+def non_dominated_sort(F: jax.Array, dom: jax.Array | None = None) -> jax.Array:
     """Return (P,) int32 front ranks (0 = best / non-dominated front).
 
     Iterative front peeling: repeatedly take the set of individuals with no
     remaining dominator, assign them the current rank, remove them. Runs a
     fixed P-iteration ``lax.while_loop`` upper bound (each iteration peels at
     least one individual) so it stays jittable with static shapes.
+
+    ``dom`` optionally supplies a precomputed (P, P) bool dominance matrix —
+    the Pallas kernel in :mod:`repro.kernels.dominance` produces one without
+    the O(P²·M) broadcast materializing in HBM on TPU.
     """
     P = F.shape[0]
-    dom = dominance_matrix(F)  # dom[i, j]: i dominates j
+    if dom is None:
+        dom = dominance_matrix(F)  # dom[i, j]: i dominates j
 
     def cond(state):
         rank, _, k = state

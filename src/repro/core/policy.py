@@ -156,7 +156,7 @@ SLO_DEFAULTS = np.array([0.9, 3.0], np.float32)
 
 
 def _slo_scores_np(genome, ttft_deadline, tpot_deadline, up, prefill, tpot,
-                   cost, queue_len, node, conc):
+                   queue_len, node, conc):
     """Shared float32 arithmetic for the numpy oracle (mirrors the jnp path
     op-for-op so argmin tie-breaking is identical)."""
     gamma = np.float32(genome[0])
@@ -213,8 +213,7 @@ def decide_pair_slo_py(genome: Sequence[float], *, ttft_deadline: float,
         np.asarray(genome, np.float32),
         np.float32(ttft_deadline), np.float32(tpot_deadline),
         np.asarray(up, np.float32), np.asarray(prefill, np.float32),
-        np.asarray(tpot, np.float32), np.asarray(cost, np.float32),
-        np.asarray(queue_len), node, conc)
+        np.asarray(tpot, np.float32), np.asarray(queue_len), node, conc)
     if feasible.any():
         return int(np.argmin(np.where(feasible, np.asarray(cost, np.float32),
                                       np.inf)))

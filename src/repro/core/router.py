@@ -11,9 +11,16 @@ fault-aware:
   healthy pair as last resort;
 * **hedging** — the scheduler may ask for a *backup* pair to duplicate a
   straggling request onto (different node than the primary);
-* **re-optimization** — ``maybe_reoptimize`` re-runs a small NSGA-II against
-  the latest observed trace window, implementing the paper's "small-scale
-  NSGA-II re-optimization triggered periodically".
+* **re-optimization** — the rolling-horizon control loop implementing (and
+  extending) the paper's "small-scale NSGA-II re-optimization triggered
+  periodically": ``record`` appends every served request + realized
+  objectives to a bounded history; ``should_reoptimize`` fires when the
+  monitor's fast/slow EWMA latency gap signals workload drift;
+  ``maybe_reoptimize`` rebuilds a trace from the recorded window (open-loop
+  when arrival timestamps were recorded, with the recorded SLO deadlines when
+  present), re-runs a small NSGA-II over it **warm-started** from the
+  previous run's population archive (``nsga2.archive_init``), and installs
+  the re-selected policy parameters.
 
 Two decision modes (``mode=``):
 
@@ -27,7 +34,6 @@ Two decision modes (``mode=``):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +60,21 @@ class RouteDecision:
     backup_pair: Optional[int] = None
 
 
+@dataclasses.dataclass
+class Observation:
+    """One served request in the router's rolling history window."""
+
+    req: Request
+    pair: int
+    features: Tuple[float, int, float]
+    quality: float
+    cost: float
+    rt: float
+    now: Optional[float] = None            # arrival timestamp (open loop)
+    ttft_deadline: Optional[float] = None  # QoE contract, if any
+    tpot_deadline: Optional[float] = None
+
+
 class RequestRouter:
     def __init__(self, cluster: ClusterSpec, thresholds: Sequence[float],
                  monitor: Optional[ClusterMonitor] = None,
@@ -76,7 +97,10 @@ class RequestRouter:
         self._np_arrays = ClusterArrays(*(np.asarray(a) for a in self.arrays))
         self._pair_node = self._np_arrays.pair_node
         self._pair_is_edge = self._np_arrays.pair_is_edge
-        self._history: list = []   # (features, realized objectives) window
+        self._history: list = []        # Observation rolling window
+        self._archive = None            # (P, D) genomes from the last re-opt
+        self._n_recorded = 0            # monotone (history list is trimmed)
+        self._last_reopt_at = 0         # _n_recorded at the last re-fit
 
     # -- hot path -------------------------------------------------------------
     def route(self, req: Request, want_backup: bool = False,
@@ -154,24 +178,132 @@ class RequestRouter:
                                          self._pair_is_edge[p]))
 
     # -- feedback & re-optimization --------------------------------------------
-    def record(self, decision: RouteDecision, quality: float, cost: float,
-               rt: float) -> None:
-        self._history.append((decision.features, decision.pair,
-                              (quality, cost, rt)))
+    def record(self, req: Request, decision: RouteDecision, quality: float,
+               cost: float, rt: float, now: Optional[float] = None,
+               ttft_deadline: Optional[float] = None,
+               tpot_deadline: Optional[float] = None) -> None:
+        """Append one served request + realized objectives to the rolling
+        history window ``maybe_reoptimize`` re-fits against. ``now`` is the
+        request's arrival timestamp (enables open-loop re-fitting); the
+        deadline pair is its QoE contract if it carried one."""
+        self._history.append(Observation(
+            req=req, pair=decision.pair, features=decision.features,
+            quality=quality, cost=cost, rt=rt, now=now,
+            ttft_deadline=ttft_deadline, tpot_deadline=tpot_deadline))
+        self._n_recorded += 1
         if len(self._history) > 10000:
             self._history = self._history[-5000:]
 
-    def maybe_reoptimize(self, trace, evaluator, generations: int = 20,
+    @property
+    def history_size(self) -> int:
+        return len(self._history)
+
+    def should_reoptimize(self, drift_threshold: float = 0.25,
+                          min_history: int = 64,
+                          min_new: int = 32) -> bool:
+        """Drift trigger: re-optimize when the monitor's fast EWMA latency
+        has moved more than ``drift_threshold`` (relative) away from its slow
+        baseline, enough history is banked to re-fit on, and at least
+        ``min_new`` requests were observed since the last re-fit (cooldown —
+        together with the post-re-fit drift re-baseline this makes one
+        regime shift trigger one re-fit, not one per check)."""
+        return (len(self._history) >= min_history
+                and self._n_recorded - self._last_reopt_at >= min_new
+                and self.monitor.drift_score() >= drift_threshold)
+
+    def maybe_reoptimize(self, window: int = 256, generations: int = 20,
                          pop_size: int = 32,
-                         weights: Sequence[float] = (1 / 3, 1 / 3, 1 / 3),
-                         seed: int = 0) -> np.ndarray:
-        """Small-scale periodic re-optimization (paper §IV-B.6)."""
-        from .nsga2 import NSGA2, NSGA2Config
-        from .policy import BOUNDS_HI, BOUNDS_LO
+                         weights: Optional[Sequence[float]] = None,
+                         seed: int = 0, concurrency: int = 4,
+                         drift_threshold: float = 0.25,
+                         min_history: int = 64,
+                         force: bool = False) -> Optional[np.ndarray]:
+        """Rolling-horizon re-optimization (paper §IV-B.6, made real).
+
+        Unless ``force``, runs only when :meth:`should_reoptimize` fires.
+        Re-fits a small NSGA-II against the last ``window`` *recorded*
+        requests: the observed trace is rebuilt with
+        ``workload.trace.trace_from_requests`` (open-loop at the recorded
+        arrival timestamps when every observation carries one, closed-loop
+        with ``concurrency`` clients otherwise; with the recorded deadlines
+        and the 4-objective QoE fitness when every observation carries a
+        contract). The search is warm-started from the previous re-opt's
+        survival-ordered population via ``nsga2.archive_init``, then the
+        Eq. (1) weighted-sum pick (uniform ``weights`` by default) replaces
+        the live policy parameters. Returns them, or None if skipped.
+        """
+        from ..workload.trace import trace_from_requests
+        from .fitness import EvalConfig, TraceEvaluator
+        from .nsga2 import NSGA2, NSGA2Config, archive_init
+        from .policy import (BOUNDS_HI, BOUNDS_LO, SLO_BOUNDS_HI,
+                             SLO_BOUNDS_LO)
+
+        if not force and not self.should_reoptimize(drift_threshold,
+                                                    min_history):
+            return None
+        obs = self._history[-window:]
+        if not obs:
+            return None
+
+        arrivals = None
+        if all(o.now is not None for o in obs):
+            t = np.asarray([o.now for o in obs], np.float32)
+            if (np.diff(t) >= 0).all():
+                arrivals = t
+        trace = trace_from_requests([o.req for o in obs], seed=seed,
+                                    arrival_time=arrivals)
+        # re-fit against the features the live router actually observed and
+        # acted on, not a fresh classifier noise draw
+        trace.complexity = np.asarray([o.features[0] for o in obs],
+                                      np.float32)
+        trace.pred_category = np.asarray([o.features[1] for o in obs],
+                                         np.int32)
+        trace.pred_conf = np.asarray([o.features[2] for o in obs],
+                                     np.float32)
+        if all(o.ttft_deadline is not None and o.tpot_deadline is not None
+               for o in obs):
+            trace.ttft_deadline = np.asarray(
+                [o.ttft_deadline for o in obs], np.float32)
+            trace.tpot_deadline = np.asarray(
+                [o.tpot_deadline for o in obs], np.float32)
+        elif self.mode == "slo":
+            # slo genomes are meaningless against +inf deadlines (every
+            # [γ, κ] is equally feasible -> degenerate flat fitness): fall
+            # back to the same per-category table defaults route() applies
+            cat = trace.pred_category
+            trace.ttft_deadline = self._slo_ttft[cat].astype(np.float32)
+            trace.tpot_deadline = self._slo_tpot[cat].astype(np.float32)
+
+        cfg_eval = EvalConfig(
+            mode="open" if arrivals is not None else "queued",
+            concurrency=concurrency)
+        evaluator = TraceEvaluator(trace, self.cluster, cfg_eval)
+
+        if self.mode == "slo":
+            genome_kind, lo, hi = "slo", SLO_BOUNDS_LO, SLO_BOUNDS_HI
+        else:
+            genome_kind, lo, hi = "continuous", BOUNDS_LO, BOUNDS_HI
         cfg = NSGA2Config(pop_size=pop_size, n_generations=generations,
-                          lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-        opt = NSGA2(evaluator.make_fitness("continuous"), cfg)
+                          lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+        objectives = "qoe" if trace.has_slos else "paper"
+        init_fn = (archive_init(self._archive, cfg)
+                   if self._archive is not None else None)
+        opt = NSGA2(evaluator.make_fitness(genome_kind, objectives=objectives),
+                    cfg, init_fn=init_fn)
         state = opt.evolve_scan(jax.random.key(seed), generations)
-        genome, _ = opt.select_by_weights(state, jnp.asarray(weights))
-        self.thresholds = np.asarray(genome, np.float32)
-        return self.thresholds
+        # archive the survival-ordered population for the next warm start
+        self._archive = np.asarray(state.genomes)
+
+        M = state.F_raw.shape[1]
+        w = (jnp.full((M,), 1.0 / M) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        genome, _ = opt.select_by_weights(state, w)
+        params = np.asarray(genome, np.float32)
+        if self.mode == "slo":
+            self.slo_params = params
+        else:
+            self.thresholds = params
+        # cooldown: re-arm the drift detector for the *next* regime shift
+        self._last_reopt_at = self._n_recorded
+        self.monitor.rebaseline_drift()
+        return params

@@ -105,6 +105,24 @@ class LLMEngine:
             self._admit()
         return retired
 
+    def cancel(self, request_id: int) -> bool:
+        """Abort a request wherever it currently lives (active slot or
+        admission queue). Frees the slot immediately and admits queued work
+        into it; produces no result entry. Returns True if found.
+
+        Used by the cluster scheduler to retire the losing copy of a hedged
+        request and to purge zombies from a crashed node's engine."""
+        for i, s in enumerate(self.slots):
+            if s.request_id == request_id:
+                self.slots[i] = _Slot()
+                self._admit()
+                return True
+        for k, item in enumerate(self.queue):
+            if item[0] == request_id:
+                del self.queue[k]
+                return True
+        return False
+
     def run_to_completion(self, max_iters: int = 10000) -> Dict[int, dict]:
         it = 0
         while (self.queue or any(s.request_id is not None

@@ -11,7 +11,15 @@ drives all engines' continuous-batching loops. Beyond-paper fault tolerance:
   ``recover_node``;
 * **straggler hedging** — a request whose engine has run more than
   ``hedge_after`` iterations beyond the node's EWMA issues a duplicate on
-  the router's backup pair; first completion wins, the loser is cancelled.
+  the router's backup pair; first completion wins, the loser is **cancelled**
+  (``LLMEngine.cancel``) and its dispatch accounting closed via
+  ``monitor.on_cancel`` — queue lengths drain back to zero, so hedging never
+  skews later queue-based routing decisions.
+
+The server keeps a simulated clock (``self.ticks``, one unit per ``step``)
+and feeds it to every monitor call that takes a timestamp, so heartbeat /
+sweep bookkeeping stays in scheduler time rather than leaking wall-clock
+``time.monotonic()`` into simulated runs.
 """
 from __future__ import annotations
 
@@ -65,6 +73,7 @@ class ClusterServer:
         self.hedge_after = hedge_after
         self._hedges = 0
         self._reroutes = 0
+        self.ticks = 0   # simulated scheduler clock: one unit per step()
 
     # -- helpers ---------------------------------------------------------------
     def _tokenize(self, req: Request, vocab: int) -> np.ndarray:
@@ -87,22 +96,37 @@ class ClusterServer:
         self.inflight[sreq.request_id] = _Flight(sreq=sreq, pair=decision.pair)
 
     def fail_node(self, node: int):
-        """Crash a node: mask it and re-route its in-flight requests."""
+        """Crash a node: mask it and re-route its in-flight requests. The
+        dead copy is cancelled from its engine (no zombie completion after
+        recovery) and its dispatch accounting closed as a failure."""
         self.monitor.mark_down(node)
         pair_node = np.asarray(self.router.arrays.pair_node)
         for rid, fl in list(self.inflight.items()):
+            hedge_dead = (fl.hedge_pair is not None
+                          and int(pair_node[fl.hedge_pair]) == node)
+            if hedge_dead:
+                self.engines[fl.hedge_pair].cancel(rid)
+                self.monitor.on_failure(node)
+                fl.hedge_pair = None
             if int(pair_node[fl.pair]) == node:
                 self._reroutes += 1
+                self.engines[fl.pair].cancel(rid)
+                self.monitor.on_failure(node)
                 decision = self.router.route(fl.sreq.req)
                 assert int(pair_node[decision.pair]) != node
                 self._dispatch(fl.sreq, decision.pair)
-                self.inflight[rid] = _Flight(sreq=fl.sreq, pair=decision.pair)
+                self.inflight[rid] = _Flight(sreq=fl.sreq, pair=decision.pair,
+                                             iters=fl.iters,
+                                             hedge_pair=fl.hedge_pair)
 
-    def recover_node(self, node: int):
-        self.monitor.heartbeat(node)
+    def recover_node(self, node: int, now: Optional[float] = None):
+        """Heartbeat the node back to life at simulated-scheduler time (or an
+        explicit ``now``) — never at wall-clock ``time.monotonic()``."""
+        self.monitor.heartbeat(node, now=self.ticks if now is None else now)
 
     def step(self):
         """One scheduling tick: every engine advances one decode iteration."""
+        self.ticks += 1
         pair_node = np.asarray(self.router.arrays.pair_node)
         for pair, eng in self.engines.items():
             node = int(pair_node[pair])
@@ -114,8 +138,16 @@ class ClusterServer:
                     fl = self.inflight.pop(rid)
                     self.done[rid] = eng.results[rid]
                     self.monitor.on_complete(node, latency=fl.iters + 1.0)
-                    # hedged duplicate (rid offset) may still be in flight —
-                    # harmless: its completion is ignored below
+                    if fl.hedge_pair is not None:
+                        # first completion wins: cancel the losing copy and
+                        # close its dispatch accounting, or `outstanding`
+                        # counts inflate forever and poison every later
+                        # queue-based routing decision
+                        loser = fl.hedge_pair if pair == fl.pair else fl.pair
+                        self.engines[loser].cancel(rid)
+                        # exactly one dispatch was charged to the loser node;
+                        # close it even if the copy already drained
+                        self.monitor.on_cancel(int(pair_node[loser]))
         # straggler hedging
         for rid, fl in list(self.inflight.items()):
             fl.iters += 1
@@ -139,4 +171,6 @@ class ClusterServer:
     def stats(self) -> dict:
         return {"completed": len(self.done), "hedges": self._hedges,
                 "reroutes": self._reroutes,
+                "cancelled": sum(s.total_cancelled
+                                 for s in self.monitor.stats.values()),
                 "queue_lengths": self.monitor.queue_lengths()}

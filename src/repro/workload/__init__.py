@@ -1,4 +1,8 @@
-from .trace import Trace, build_trace
+from .arrivals import (PhaseSpec, build_open_loop_trace, mmpp_arrivals,
+                       onoff_arrivals, poisson_arrivals)
+from .trace import Trace, build_trace, trace_from_requests
 from .tokenizer import count_tokens
 
-__all__ = ["Trace", "build_trace", "count_tokens"]
+__all__ = ["Trace", "build_trace", "trace_from_requests", "count_tokens",
+           "PhaseSpec", "build_open_loop_trace", "mmpp_arrivals",
+           "onoff_arrivals", "poisson_arrivals"]

@@ -7,6 +7,17 @@ datasets, with 125 requests per dataset."
 
 ``Trace`` is the array-of-structs view consumed by the JAX fitness evaluator
 and the discrete-event simulator. Everything is deterministic given ``seed``.
+
+Two trace regimes:
+
+* **closed-loop** (the paper's test script): no timestamps — G clients issue
+  their next request on completion of the previous one;
+* **open-loop** (dynamic-workload extension): ``arrival_time`` carries one
+  timestamp per request and the simulators release requests at those instants
+  regardless of completions. Open-loop traces are produced by
+  ``workload.arrivals`` (Poisson / bursty on-off / diurnal MMPP with drifting
+  category mix) and by the runtime router when it re-fits on its observed
+  history window (``trace_from_requests``).
 """
 from __future__ import annotations
 
@@ -40,6 +51,10 @@ class Trace:
     ttft_deadline: Optional[np.ndarray] = None   # (I,) float32 seconds
     tpot_deadline: Optional[np.ndarray] = None   # (I,) float32 s/token
     slo_interactive: Optional[np.ndarray] = None  # (I,) bool deadline class
+    # Optional open-loop arrival timestamps (sorted ascending, seconds).
+    # None = closed-loop trace.
+    arrival_time: Optional[np.ndarray] = None    # (I,) float32
+    phase_id: Optional[np.ndarray] = None        # (I,) int32 workload phase
 
     @property
     def n_requests(self) -> int:
@@ -49,19 +64,20 @@ class Trace:
     def has_slos(self) -> bool:
         return self.ttft_deadline is not None and self.tpot_deadline is not None
 
+    @property
+    def has_arrivals(self) -> bool:
+        return self.arrival_time is not None
 
-def build_trace(n_requests: int = 500, seed: int = 0) -> Trace:
-    per = (n_requests + len(ORDER) - 1) // len(ORDER)
-    pools = {name: ds.generate(name, per, seed=seed) for name in ORDER}
-    cursors = {name: 0 for name in ORDER}
+
+def trace_from_requests(reqs: List[ds.Request], seed: int = 0,
+                        arrival_time: Optional[np.ndarray] = None) -> Trace:
+    """Build the array-of-structs view over an explicit request list.
+
+    Shared by ``build_trace`` (round-robin closed loop), the open-loop
+    generators in ``workload.arrivals``, and the runtime router's rolling-
+    horizon re-fit over its recorded history window.
+    """
     rng = np.random.default_rng(np.random.SeedSequence([seed, 1234]))
-
-    reqs: List[ds.Request] = []
-    for i in range(n_requests):
-        name = ORDER[i % len(ORDER)]
-        reqs.append(pools[name][cursors[name]])
-        cursors[name] += 1
-
     I = len(reqs)
     task = np.zeros(I, np.int32)
     pred_cat = np.zeros(I, np.int32)
@@ -82,7 +98,27 @@ def build_trace(n_requests: int = 500, seed: int = 0) -> Trace:
         difficulty[i] = r.difficulty
         qbytes[i] = r.query_bytes
 
+    if arrival_time is not None:
+        arrival_time = np.asarray(arrival_time, np.float32)
+        assert arrival_time.shape == (I,), "one timestamp per request"
+        assert (np.diff(arrival_time) >= 0).all(), \
+            "open-loop arrival times must be sorted ascending"
+
     return Trace(requests=reqs, task=task, pred_category=pred_cat,
                  pred_conf=pred_conf, complexity=complexity,
                  prompt_tokens=prompt_tokens, resp_tokens_mean=resp_mean,
-                 difficulty=difficulty, query_bytes=qbytes)
+                 difficulty=difficulty, query_bytes=qbytes,
+                 arrival_time=arrival_time)
+
+
+def build_trace(n_requests: int = 500, seed: int = 0) -> Trace:
+    per = (n_requests + len(ORDER) - 1) // len(ORDER)
+    pools = {name: ds.generate(name, per, seed=seed) for name in ORDER}
+    cursors = {name: 0 for name in ORDER}
+
+    reqs: List[ds.Request] = []
+    for i in range(n_requests):
+        name = ORDER[i % len(ORDER)]
+        reqs.append(pools[name][cursors[name]])
+        cursors[name] += 1
+    return trace_from_requests(reqs, seed=seed)

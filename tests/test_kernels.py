@@ -4,9 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 import repro.kernels.decode_attention as dec
 import repro.kernels.dominance as dom

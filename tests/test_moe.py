@@ -7,9 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 from repro.models import moe as M
 from repro.models.config import ModelConfig, MoECfg

@@ -3,9 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 from repro.core.nsga2 import (NSGA2, NSGA2Config, binary_tournament,
                               polynomial_mutation, reassignment_mutation,
@@ -90,11 +89,13 @@ def _zdt1_fitness(genomes, key):
 
 
 def test_nsga2_converges_on_zdt1():
+    # 90 generations: 60 leaves g.mean ≈ 1.5 (marginal) on this jax version's
+    # RNG stream; 90 converges decisively (g.mean ≈ 1.09)
     D = 8
-    cfg = NSGA2Config(pop_size=48, n_generations=60, lo=jnp.zeros(D),
+    cfg = NSGA2Config(pop_size=48, n_generations=90, lo=jnp.zeros(D),
                       hi=jnp.ones(D))
     opt = NSGA2(_zdt1_fitness, cfg)
-    state = opt.evolve_scan(jax.random.key(0), 60)
+    state = opt.evolve_scan(jax.random.key(0), 90)
     g = 1 + 9 * np.mean(np.asarray(state.genomes)[:, 1:], axis=1)
     assert g.mean() < 1.5  # optimum g = 1
     # front should span f1 (diversity via crowding)
@@ -116,6 +117,53 @@ def test_nsga2_penalty_excludes_infeasible():
     genomes, front = opt.pareto_front(state)
     assert front.shape[0] > 0
     assert (np.asarray(genomes)[:, 1] <= 0.5 + 1e-6).all()
+
+
+def test_pallas_dominance_flag_matches_reference():
+    """use_pallas_dominance must produce the exact same evolution as the jnp
+    reference sort (the flag was stored-but-dead before; interpret-mode
+    kernel on CPU)."""
+    D = 6
+    cfg = NSGA2Config(pop_size=16, n_generations=6, lo=jnp.zeros(D),
+                      hi=jnp.ones(D))
+    ref = NSGA2(_zdt1_fitness, cfg).evolve_scan(jax.random.key(0), 6)
+    pal = NSGA2(_zdt1_fitness, cfg,
+                use_pallas_dominance=True).evolve_scan(jax.random.key(0), 6)
+    np.testing.assert_allclose(np.asarray(ref.F_raw), np.asarray(pal.F_raw),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ref.rank), np.asarray(pal.rank))
+    np.testing.assert_allclose(np.asarray(ref.genomes),
+                               np.asarray(pal.genomes), rtol=1e-6)
+
+
+def _discrete_fitness(genomes, key):
+    m = jnp.mean(genomes.astype(jnp.float32), axis=1)
+    return jnp.stack([m, -m], axis=1), jnp.zeros(genomes.shape[0])
+
+
+def test_discrete_default_init_uses_genome_length():
+    """Regression: the default discrete init hardcoded D=1, silently
+    optimizing a single gene per individual."""
+    n_requests = 53
+    cfg = NSGA2Config(pop_size=8, n_generations=2, genome="discrete",
+                      n_choices=7, genome_length=n_requests)
+    opt = NSGA2(_discrete_fitness, cfg)
+    state = opt.init(jax.random.key(0))
+    assert state.genomes.shape == (8, n_requests)
+    g = np.asarray(state.genomes)
+    assert (g >= 0).all() and (g < 7).all()
+    # and the genes are not all identical within an individual (D>1 entropy)
+    assert any(len(np.unique(g[i])) > 1 for i in range(8))
+    # evolution preserves the shape
+    state = opt.evolve_scan(jax.random.key(0), 2)
+    assert state.genomes.shape == (8, n_requests)
+
+
+def test_discrete_init_without_length_raises():
+    cfg = NSGA2Config(pop_size=4, n_generations=1, genome="discrete",
+                      n_choices=3)
+    with pytest.raises(AssertionError):
+        NSGA2(_discrete_fitness, cfg).init(jax.random.key(0))
 
 
 def test_evolve_matches_evolve_scan():

@@ -1,0 +1,290 @@
+"""Dynamic-workload / online re-optimization subsystem tests: open-loop
+arrival generators, JAX-vs-DES equivalence on open-loop traces, the rolling-
+horizon ``maybe_reoptimize`` loop (history re-fit, warm start, drift
+trigger), and the ClusterMonitor clock fixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.monitor import ClusterMonitor
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.spec import paper_testbed
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.nsga2 import NSGA2, NSGA2Config, archive_init
+from repro.core.policy import BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS
+from repro.core.router import RequestRouter
+from repro.workload.arrivals import (PhaseSpec, build_open_loop_trace,
+                                     mmpp_arrivals, onoff_arrivals,
+                                     poisson_arrivals)
+
+CLUSTER = paper_testbed()
+
+CALM = (PhaseSpec(rate=0.4, duration=200.0, mix=(0.05, 0.05, 0.85, 0.05)),)
+STORM = (PhaseSpec(rate=8.0, duration=200.0, mix=(0.05, 0.85, 0.05, 0.05),
+                   length_scale=2.0),)
+DIURNAL = (PhaseSpec(rate=1.0, duration=30.0, mix=(0.7, 0.1, 0.1, 0.1)),
+           PhaseSpec(rate=6.0, duration=30.0, mix=(0.1, 0.7, 0.1, 0.1),
+                     length_scale=1.5),
+           PhaseSpec(rate=2.5, duration=30.0))
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+def test_poisson_arrivals_rate_and_determinism():
+    t1 = poisson_arrivals(4000, rate=5.0, seed=0)
+    t2 = poisson_arrivals(4000, rate=5.0, seed=0)
+    np.testing.assert_array_equal(t1, t2)
+    assert (np.diff(t1) >= 0).all()
+    # empirical rate within 10% of lambda
+    rate = len(t1) / float(t1[-1])
+    assert 0.9 * 5.0 <= rate <= 1.1 * 5.0
+
+
+def test_mmpp_cycles_phases_and_modulates_rate():
+    phases = (PhaseSpec(rate=10.0, duration=10.0),
+              PhaseSpec(rate=1.0, duration=10.0))
+    times, ids = mmpp_arrivals(600, phases, seed=1)
+    assert times.shape == ids.shape == (600,)
+    assert (np.diff(times) >= 0).all()
+    assert set(np.unique(ids)) == {0, 1}
+    # the high-rate phase must produce ~10x the arrivals of the low-rate one
+    n_hi, n_lo = int((ids == 0).sum()), int((ids == 1).sum())
+    assert n_hi > 4 * n_lo
+
+
+def test_onoff_is_bursty():
+    t = onoff_arrivals(400, rate_on=20.0, rate_off=0.5, on_s=5.0, off_s=5.0,
+                       seed=2)
+    gaps = np.diff(t)
+    # burst gaps (~0.05 s) and idle gaps (~2 s) both present
+    assert gaps.min() < 0.2 and gaps.max() > 1.0
+
+
+def test_open_loop_trace_mix_drift():
+    tr = build_open_loop_trace(300, DIURNAL, seed=3)
+    assert tr.has_arrivals and (np.diff(tr.arrival_time) >= 0).all()
+    assert tr.phase_id.shape == (300,)
+    # phase 0 is code-heavy (mbpp = task 0), phase 1 math-heavy (gsm8k = 1)
+    t0 = tr.task[tr.phase_id == 0]
+    t1 = tr.task[tr.phase_id == 1]
+    assert (t0 == 0).mean() > 0.5
+    assert (t1 == 1).mean() > 0.5
+    # phase 1 scales prompt lengths by 1.5x
+    p0 = tr.prompt_tokens[tr.phase_id == 0].mean()
+    p1 = tr.prompt_tokens[tr.phase_id == 1].mean()
+    assert p1 > 1.15 * p0
+
+
+def test_open_loop_trace_deterministic():
+    a = build_open_loop_trace(120, DIURNAL, seed=5)
+    b = build_open_loop_trace(120, DIURNAL, seed=5)
+    np.testing.assert_array_equal(a.arrival_time, b.arrival_time)
+    np.testing.assert_array_equal(a.task, b.task)
+    np.testing.assert_array_equal(a.prompt_tokens, b.prompt_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop equivalence: JAX evaluator == both DES oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("phases", [CALM, STORM, DIURNAL],
+                         ids=["calm", "storm", "diurnal"])
+def test_open_loop_jax_matches_des_oracles(phases):
+    tr = build_open_loop_trace(120, phases, seed=7)
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, CLUSTER.n_pairs, tr.n_requests).astype(np.int32)
+    ev = TraceEvaluator(tr, CLUSTER, EvalConfig(mode="open"))
+    res = ev.run_assignment(jnp.asarray(assign))
+    sim = ClusterSimulator(tr, CLUSTER)
+    a = sim.run(assign)            # picks up trace.arrival_time
+    b = sim.run_event_heap(assign)
+    for got, want in ((np.asarray(res.rt), a.rt),
+                      (np.asarray(res.q), a.q),
+                      (np.asarray(res.cost), a.cost),
+                      (np.asarray(res.ttft), a.ttft),
+                      (np.asarray(res.tpot), a.tpot)):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # the two independent DES implementations agree bit-tight open-loop
+    np.testing.assert_allclose(a.rt, b.rt, rtol=1e-9)
+    np.testing.assert_allclose(a.ttft, b.ttft, rtol=1e-9)
+
+
+def test_open_loop_sparse_arrivals_have_no_wait():
+    """Arrivals far apart ⇒ every slot free on arrival ⇒ zero queue wait."""
+    tr = build_open_loop_trace(40, (PhaseSpec(rate=0.01, duration=1e5),),
+                               seed=9)
+    assign = np.zeros(40, np.int64)  # everything on the cloud pair
+    r = ClusterSimulator(tr, CLUSTER).run(assign)
+    np.testing.assert_allclose(r.wait, 0.0, atol=1e-9)
+
+
+def test_explicit_arrivals_override_trace_timestamps():
+    """run(..., arrivals=) overrides the trace's own arrival_time: squeezing
+    every arrival to t=0 can only increase queueing."""
+    tr = build_open_loop_trace(60, CALM, seed=11)
+    assign = np.zeros(60, np.int64)
+    sim = ClusterSimulator(tr, CLUSTER)
+    spread = sim.run(assign)
+    squeezed = sim.run(assign, arrivals=np.zeros(60))
+    assert squeezed.wait.sum() > spread.wait.sum()
+    assert squeezed.rt.mean() > spread.rt.mean()
+
+
+# ---------------------------------------------------------------------------
+# Warm start
+# ---------------------------------------------------------------------------
+def _zdt1(genomes, key):
+    f1 = genomes[:, 0]
+    g = 1 + 9 * jnp.mean(genomes[:, 1:], axis=1)
+    f2 = g * (1 - jnp.sqrt(f1 / g))
+    return jnp.stack([f1, f2], axis=1), jnp.zeros(genomes.shape[0])
+
+
+def test_archive_init_seeds_and_fills():
+    D = 5
+    cfg = NSGA2Config(pop_size=12, n_generations=1, lo=jnp.zeros(D),
+                      hi=jnp.ones(D))
+    arch = jnp.full((4, D), 0.25)
+    pop = archive_init(arch, cfg)(jax.random.key(0))
+    assert pop.shape == (12, D)
+    np.testing.assert_allclose(np.asarray(pop[:4]), 0.25, rtol=1e-6)
+    rest = np.asarray(pop[4:])
+    assert (rest >= 0).all() and (rest <= 1).all()
+    assert not np.allclose(rest, 0.25)  # random fill actually explores
+
+
+def test_warm_start_front_no_worse_than_cold():
+    """The rolling-horizon regime: a *small* re-opt budget (2 generations)
+    warm-started from the previous window's survival-ordered population must
+    (a) never lose the archived front's ground (elitism keeps the seeds) and
+    (b) beat a cold start at the same equal-generation budget."""
+    from repro.core.pareto import hypervolume_2d
+    D = 16
+    ref = jnp.array([1.5, 10.0])
+    cfg_long = NSGA2Config(pop_size=24, n_generations=20, lo=jnp.zeros(D),
+                           hi=jnp.ones(D))
+    s_prev = NSGA2(_zdt1, cfg_long).evolve_scan(jax.random.key(0), 20)
+    hv_arch = float(hypervolume_2d(s_prev.F_raw[s_prev.rank == 0], ref))
+
+    cfg = NSGA2Config(pop_size=24, n_generations=2, lo=jnp.zeros(D),
+                      hi=jnp.ones(D))
+    warm = NSGA2(_zdt1, cfg, init_fn=archive_init(s_prev.genomes, cfg))
+    s_warm = warm.evolve_scan(jax.random.key(1), 2)
+    s_cold = NSGA2(_zdt1, cfg).evolve_scan(jax.random.key(1), 2)
+
+    hv_warm = float(hypervolume_2d(s_warm.F_raw[s_warm.rank == 0], ref))
+    hv_cold = float(hypervolume_2d(s_cold.F_raw[s_cold.rank == 0], ref))
+    assert hv_warm >= hv_arch - 1e-3   # (a) no ground lost across windows
+    assert hv_warm >= hv_cold          # (b) beats cold at equal budget
+
+
+# ---------------------------------------------------------------------------
+# Rolling-horizon maybe_reoptimize
+# ---------------------------------------------------------------------------
+def _feed(router, trace):
+    for i, r in enumerate(trace.requests):
+        d = router.route(r)
+        router.record(r, d, quality=0.5, cost=0.01, rt=1.0,
+                      now=float(trace.arrival_time[i]))
+
+
+def test_maybe_reoptimize_uses_recorded_history():
+    """Two routers with very different observed windows must re-fit to
+    different policies (fails when maybe_reoptimize ignores its history),
+    and the same window must re-fit deterministically."""
+    calm_tr = build_open_loop_trace(64, CALM, seed=0)
+    storm_tr = build_open_loop_trace(64, STORM, seed=0)
+
+    ra = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    _feed(ra, calm_tr)
+    rb = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    _feed(rb, storm_tr)
+    rc = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    _feed(rc, calm_tr)
+
+    pa = ra.maybe_reoptimize(force=True, generations=12, pop_size=16, seed=0)
+    pb = rb.maybe_reoptimize(force=True, generations=12, pop_size=16, seed=0)
+    pc = rc.maybe_reoptimize(force=True, generations=12, pop_size=16, seed=0)
+    assert pa is not None and pb is not None
+    assert not np.allclose(pa, pb), \
+        "re-optimization ignored the recorded history window"
+    np.testing.assert_allclose(pa, pc)          # deterministic re-fit
+    np.testing.assert_allclose(ra.thresholds, pa)  # policy installed
+
+
+def test_maybe_reoptimize_respects_drift_trigger():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    _feed(router, build_open_loop_trace(64, CALM, seed=1))
+    # stationary latencies -> no drift -> skip
+    for _ in range(50):
+        router.monitor.on_complete(0, 1.0)
+    assert not router.should_reoptimize()
+    assert router.maybe_reoptimize(generations=4, pop_size=8) is None
+    # latency regime shift -> drift -> re-optimize
+    for _ in range(12):
+        router.monitor.on_complete(0, 5.0)
+    assert router.monitor.drift_score() > 0.25
+    assert router.should_reoptimize()
+    out = router.maybe_reoptimize(generations=4, pop_size=8)
+    assert out is not None
+    # cooldown: the re-fit re-baselines the drift detector and requires new
+    # observations, so the same shift does not re-fire on the next check
+    assert not router.should_reoptimize()
+    assert router.maybe_reoptimize(generations=4, pop_size=8) is None
+
+
+def test_maybe_reoptimize_warm_starts_from_archive():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    _feed(router, build_open_loop_trace(64, STORM, seed=2))
+    assert router._archive is None
+    p1 = router.maybe_reoptimize(force=True, generations=6, pop_size=16)
+    assert router._archive is not None and router._archive.shape == (16, 6)
+    p2 = router.maybe_reoptimize(force=True, generations=6, pop_size=16,
+                                 seed=1)
+    assert p1 is not None and p2 is not None
+
+
+def test_maybe_reoptimize_needs_history():
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+    assert router.maybe_reoptimize(force=True) is None
+
+
+# ---------------------------------------------------------------------------
+# ClusterMonitor clock fixes
+# ---------------------------------------------------------------------------
+def test_sweep_does_not_expire_fresh_nodes():
+    """A node that has never heartbeated is healthy until a full timeout has
+    elapsed since construction (the seed expired it at now > timeout)."""
+    mon = ClusterMonitor(2, heartbeat_timeout=10.0)
+    mon.sweep(now=9.0)
+    assert all(mon.healthy_mask())
+    mon.sweep(now=11.0)
+    assert not any(mon.healthy_mask())
+
+
+def test_monitor_construction_time_offsets_expiry():
+    mon = ClusterMonitor(1, heartbeat_timeout=10.0, now=100.0)
+    mon.sweep(now=105.0)
+    assert mon.healthy_mask() == (True,)
+    mon.sweep(now=111.0)
+    assert mon.healthy_mask() == (False,)
+
+
+def test_heartbeat_explicit_now_keeps_simulated_time():
+    mon = ClusterMonitor(1, heartbeat_timeout=10.0)
+    mon.heartbeat(0, now=42.0)
+    assert mon.stats[0].last_heartbeat == 42.0
+    mon.sweep(now=50.0)
+    assert mon.healthy_mask() == (True,)
+
+
+def test_drift_score_flat_then_shift():
+    mon = ClusterMonitor(1)
+    assert mon.drift_score() == 0.0
+    for _ in range(60):
+        mon.on_complete(0, 2.0)
+    assert mon.drift_score() < 0.05
+    for _ in range(10):
+        mon.on_complete(0, 8.0)
+    assert mon.drift_score() > 0.25

@@ -2,9 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 from repro.core.pareto import (crowding_distance, dominance_matrix,
                                hypervolume_2d, non_dominated_sort, pareto_mask)

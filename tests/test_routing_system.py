@@ -5,9 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 from repro.cluster.simulator import ClusterSimulator
 from repro.cluster.spec import paper_testbed

@@ -140,3 +140,42 @@ def test_cluster_server_hedges_stragglers(server_parts):
     srv.run()
     assert srv.stats()["hedges"] >= 1
     assert len(srv.done) == 6
+
+
+def test_hedging_accounting_drains_to_zero(server_parts):
+    """Regression: the losing hedged duplicate used to leave `outstanding`
+    inflated forever, skewing every later queue-based routing decision."""
+    cluster, builders, trace = server_parts
+    srv = ClusterServer(cluster, builders, PAPER_DEFAULTS,
+                        EngineConfig(max_slots=1, max_seq=48,
+                                     max_new_tokens=3),
+                        hedge_after=1)
+    for i, r in enumerate(trace.requests[:8]):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=3))
+    srv.run()
+    stats = srv.stats()
+    assert stats["hedges"] >= 1
+    assert stats["cancelled"] >= 1          # losers were actually cancelled
+    assert all(q == 0 for q in stats["queue_lengths"]), stats
+    # conservation: every dispatch is closed as complete/failed/cancelled
+    for s in srv.monitor.stats.values():
+        assert (s.total_dispatched
+                == s.total_completed + s.total_failed + s.total_cancelled)
+
+
+def test_recover_node_uses_simulated_clock(server_parts):
+    """Regression: recover_node injected wall-clock time.monotonic() into
+    the monitor's simulated timeline."""
+    cluster, builders, trace = server_parts
+    srv = ClusterServer(cluster, builders, PAPER_DEFAULTS,
+                        EngineConfig(max_slots=2, max_seq=48,
+                                     max_new_tokens=2))
+    for i, r in enumerate(trace.requests[:4]):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=2))
+    srv.fail_node(1)
+    srv.step()
+    srv.recover_node(1)
+    hb = srv.monitor.stats[1].last_heartbeat
+    assert hb == srv.ticks            # scheduler ticks, not time.monotonic()
+    assert srv.monitor.healthy_mask()[1]
+    srv.run()

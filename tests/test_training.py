@@ -6,9 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # soft optional dep
 
 from repro.configs import get
 from repro.training.grad_compress import (compress_int8, decompress_int8,
