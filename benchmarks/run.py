@@ -11,13 +11,15 @@ import traceback
 
 def main() -> None:
     from . import (fig2_quality, fig3_tradeoff, fig4_concurrency, nsga2_perf,
-                   online_drift, roofline, slo_attainment, table2_routing)
+                   online_drift, prefix_reuse, roofline, slo_attainment,
+                   table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
                ("fig4_concurrency", fig4_concurrency),
                ("slo_attainment", slo_attainment),
                ("online_drift", online_drift),
+               ("prefix_reuse", prefix_reuse),
                ("nsga2_perf", nsga2_perf),
                ("roofline", roofline)]
     failures = 0

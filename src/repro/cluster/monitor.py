@@ -42,6 +42,12 @@ class NodeStats:
     ewma_slow: float = 0.0
     alpha_fast: float = 0.3
     alpha_slow: float = 0.03
+    # prefix-cache state: (kind, group) -> cached prefix tokens on this node,
+    # where kind is "sess" (one session's latest prompt) or "sys" (a shared
+    # system prompt). The cache-affinity router reads this to estimate the
+    # cached-prefix fraction per candidate node.
+    cached_prefixes: Dict[Tuple[str, int], int] = dataclasses.field(
+        default_factory=dict)
 
 
 class ClusterMonitor:
@@ -96,6 +102,41 @@ class ClusterMonitor:
         for s in self.stats.values():
             if now - s.last_heartbeat > self.heartbeat_timeout:
                 s.healthy = False
+
+    # -- prefix-cache state (cache-affinity routing) ---------------------------
+    def record_prefix(self, node: int, key: Tuple[str, int],
+                      tokens: int) -> None:
+        """A prompt prefix of ``tokens`` tokens is now cached on ``node``
+        (monotone max: sessions only ever extend their prompts)."""
+        cp = self.stats[node].cached_prefixes
+        cp[key] = max(cp.get(key, 0), int(tokens))
+
+    def cached_tokens(self, node: int, key: Tuple[str, int]) -> int:
+        return self.stats[node].cached_prefixes.get(key, 0)
+
+    def drop_prefixes(self, node: int) -> None:
+        """Node restart / cache flush: forget its prefix state."""
+        self.stats[node].cached_prefixes.clear()
+
+    def hit_fractions(self, session: int, sys: int, prompt_tokens: float,
+                      sys_tokens: float, block: int = 16) -> Tuple[float, ...]:
+        """Expected cached-prefix fraction of this prompt per node.
+
+        Whole-block granularity (the paged pool shares only full blocks);
+        the session's own cached prompt dominates the shared system prompt
+        when both are resident."""
+        blk_p = (int(prompt_tokens) // block) * block
+        blk_s = (int(sys_tokens) // block) * block
+        out = []
+        for j in sorted(self.stats):
+            hit = 0
+            if session >= 0:
+                hit = min(self.cached_tokens(j, ("sess", session)), blk_p)
+            if sys >= 0:
+                hit = max(hit, min(self.cached_tokens(j, ("sys", sys)),
+                                   blk_s))
+            out.append(hit / max(float(prompt_tokens), 1.0))
+        return tuple(out)
 
     # -- router-facing views ---------------------------------------------------
     def queue_lengths(self) -> Tuple[int, ...]:

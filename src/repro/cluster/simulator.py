@@ -9,6 +9,13 @@ traces/policies — the standard way to de-risk a vectorized rewrite.
 It also powers failure-injection experiments that the fixed-shape JAX scan
 does not model: node crash/recovery events, hedged requests, and reroute-on-
 failure, used by the serving scheduler tests.
+
+With ``prefix_cache=True`` (session traces from ``workload.sessions``, open
+loop) both oracles mirror the JAX evaluator's prefix-cache model: a served
+prompt's whole-block prefix stays resident on its node, and a later request
+of the same session (or sharing the same system prompt) on that node pays
+only the uncached prefill fraction plus a discounted price for cached prompt
+tokens — the equivalence property extends to this regime.
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ class SimResult:
     # externally-constructed pre-QoE SimResults keep working
     ttft: Optional[np.ndarray] = None   # upload + queue wait + prefill
     tpot: Optional[np.ndarray] = None   # decode seconds per output token
+    hit: Optional[np.ndarray] = None    # realized cached-prefix fraction
 
     def summary(self) -> Dict[str, float]:
         out = {"avg_quality": float(self.q.mean()),
@@ -62,9 +70,15 @@ class ClusterSimulator:
     """Trace execution with per-node slots: closed-loop (G clients) or
     open-loop (requests released at explicit ``arrivals`` timestamps)."""
 
-    def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0):
+    def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0,
+                 prefix_cache: bool = False, cache_block: int = 16):
+        if prefix_cache:
+            assert trace.has_sessions and trace.has_arrivals, \
+                "prefix_cache needs an open-loop session trace"
         self.trace = trace
         self.cluster = cluster
+        self.prefix_cache = prefix_cache
+        self.cache_block = cache_block
         # reuse the same static tables as the JAX path so quality/cost/
         # service-time definitions are shared; only queueing is independent
         from ..core.fitness import build_tables
@@ -76,9 +90,62 @@ class ClusterSimulator:
         self.down = np.asarray(tables.down_time)
         self.prefill = np.asarray(tables.prefill_time)
         self.tpot_pair = np.asarray(tables.tpot)
+        self.prompt_cost = np.asarray(tables.prompt_cost)
         self.pair_node = np.asarray(arrays.pair_node)
         self.node_conc = np.asarray(arrays.node_conc)
         self.arrays = arrays
+
+    # -- prefix-cache mirror (independent of the JAX carry implementation) ----
+    def _cache_state(self):
+        return {} if self.prefix_cache else None
+
+    def _cache_hit(self, state, i: int, node: int) -> float:
+        """Cached fraction of request i's prompt on ``node`` (0 when the
+        model is off), from the per-(node, session/system-prompt) state."""
+        if state is None:
+            return 0.0
+        tr = self.trace
+        P = float(tr.prompt_tokens[i])
+        blk = self.cache_block
+        g = int(tr.group_id[i])
+        y = int(tr.sys_id[i]) if tr.sys_id is not None else -1
+        hit = 0.0
+        if g >= 0:
+            hit = min(state.get((node, "sess", g), 0.0),
+                      float(int(P) // blk * blk))
+        if y >= 0:
+            sys_tok = float(tr.sys_tokens[i])
+            hit = max(hit, min(state.get((node, "sys", y), 0.0),
+                               float(int(sys_tok) // blk * blk)))
+        return hit / max(P, 1.0)
+
+    def _cache_admit(self, state, i: int, node: int) -> None:
+        if state is None:
+            return
+        tr = self.trace
+        blk = self.cache_block
+        g = int(tr.group_id[i])
+        y = int(tr.sys_id[i]) if tr.sys_id is not None else -1
+        if g >= 0:
+            key = (node, "sess", g)
+            state[key] = max(state.get(key, 0.0),
+                             float(int(tr.prompt_tokens[i]) // blk * blk))
+        if y >= 0:
+            key = (node, "sys", y)
+            state[key] = max(state.get(key, 0.0),
+                             float(int(tr.sys_tokens[i]) // blk * blk))
+
+    def _discounted(self, state, i: int, pair: int):
+        """(hit_frac, service_eff, prefill_eff, cost_eff) for request i."""
+        from ..core.policy import CACHED_TOKEN_PRICE_FACTOR
+        node = int(self.pair_node[pair])
+        hf = self._cache_hit(state, i, node)
+        service = self.service[i, pair] - hf * self.prefill[i, pair]
+        prefill = self.prefill[i, pair] * (1.0 - hf)
+        cost = (self.cost[i, pair]
+                - hf * (1.0 - CACHED_TOKEN_PRICE_FACTOR)
+                * self.prompt_cost[i, pair])
+        return hf, service, prefill, cost
 
     def run(self, assign: Sequence[int], concurrency: int = 1,
             down_nodes: Optional[Dict[int, Tuple[float, float]]] = None,
@@ -120,8 +187,10 @@ class ClusterSimulator:
         wait = np.zeros(I)
         ttft = np.zeros(I)
         tpot = np.zeros(I)
+        hit = np.zeros(I)
         out_assign = np.zeros(I, np.int64)
         busy = np.zeros(n_nodes)
+        cache = self._cache_state()
 
         for i in range(I):
             c = i % G
@@ -137,26 +206,30 @@ class ClusterSimulator:
                             else int(self.arrays.cloud_fallback_pair))
                     node = int(self.pair_node[pair])
 
+            hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
+                                                                pair)
             ready = arrival + self.up[i, pair]
             s = int(np.argmin(slots[node]))
             start = max(ready, slots[node][s])
-            finish = start + self.service[i, pair]
+            finish = start + service_i
             completion = finish + self.down[i, pair]
             slots[node][s] = finish
             client_ready[c] = completion
+            self._cache_admit(cache, i, node)
 
             q[i] = self.quality[i, pair]
-            cost[i] = self.cost[i, pair]
+            cost[i] = cost_i
             rt[i] = completion - arrival
             wait[i] = start - ready
-            # first token leaves prefill at start + prefill_time
-            ttft[i] = (start + self.prefill[i, pair]) - arrival
+            # first token leaves prefill at start + (uncached) prefill_time
+            ttft[i] = (start + prefill_i) - arrival
             tpot[i] = self.tpot_pair[pair]
+            hit[i] = hf
             out_assign[i] = pair
-            busy[node] += self.service[i, pair]
+            busy[node] += service_i
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit)
 
     # -- event-heap variant -------------------------------------------------
     def run_event_heap(self, assign: Sequence[int], concurrency: int = 1,
@@ -174,8 +247,9 @@ class ClusterSimulator:
 
         q = np.zeros(I); cost = np.zeros(I); rt = np.zeros(I)
         wait = np.zeros(I); out_assign = np.zeros(I, np.int64)
-        ttft = np.zeros(I); tpot = np.zeros(I)
+        ttft = np.zeros(I); tpot = np.zeros(I); hit = np.zeros(I)
         busy = np.zeros(n_nodes)
+        cache = self._cache_state()
 
         # events: (time, seq, kind, payload)
         heap: List[Tuple[float, int, str, tuple]] = []
@@ -201,17 +275,20 @@ class ClusterSimulator:
             if kind == "issue":
                 i, c = payload
                 pair = int(assign[i]); node = int(self.pair_node[pair])
+                hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
+                                                                    pair)
                 ready = t + self.up[i, pair]
                 s = int(np.argmin(node_free[node]))
                 start = max(ready, node_free[node][s])
-                finish = start + self.service[i, pair]
+                finish = start + service_i
                 node_free[node][s] = finish
                 completion = finish + self.down[i, pair]
-                q[i] = self.quality[i, pair]; cost[i] = self.cost[i, pair]
+                self._cache_admit(cache, i, node)
+                q[i] = self.quality[i, pair]; cost[i] = cost_i
                 rt[i] = completion - t; wait[i] = start - ready
-                ttft[i] = (start + self.prefill[i, pair]) - t
-                tpot[i] = self.tpot_pair[pair]
-                out_assign[i] = pair; busy[node] += self.service[i, pair]
+                ttft[i] = (start + prefill_i) - t
+                tpot[i] = self.tpot_pair[pair]; hit[i] = hf
+                out_assign[i] = pair; busy[node] += service_i
                 heapq.heappush(heap, (completion, seq, "done", (i, c))); seq += 1
             else:  # done -> closed-loop client issues its next request
                 _, c = payload
@@ -220,4 +297,4 @@ class ClusterSimulator:
                     seq += 1; issued += 1
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit)

@@ -22,14 +22,20 @@ fault-aware:
   previous run's population archive (``nsga2.archive_init``), and installs
   the re-selected policy parameters.
 
-Two decision modes (``mode=``):
+Three decision modes (``mode=``):
 
 * ``"threshold"`` — the paper's Algorithm 2 over difficulty/queue/confidence
   thresholds;
 * ``"slo"`` — QoE-aware phase-split routing: estimates each pair's TTFT and
   TPOT against the request's (per-category or explicit) deadlines and picks
   the cheapest feasible pair (see ``core.policy.decide_pair_slo_py`` and
-  ``workload.slo``).
+  ``workload.slo``);
+* ``"affinity"`` — cache-affinity routing: the SLO decision with the
+  monitor's per-node prefix-cache state folded in — the expected
+  cached-prefix fraction discounts the prefill term of the TTFT estimate and
+  the cached prompt tokens' price, and ρ adds stickiness toward nodes
+  already holding the session's (or shared system prompt's) KV
+  (``core.policy.decide_pair_affinity_py``, ``serving.kvcache``).
 """
 from __future__ import annotations
 
@@ -47,7 +53,9 @@ from ..workload.datasets import Request
 from ..workload.features import complexity_score
 from ..workload.slo import DEFAULT_SLO_TABLE, slo_arrays
 from .fitness import request_pair_estimates
-from .policy import SLO_DEFAULTS, decide_pair_py, decide_pair_slo_py
+from .policy import (AFFINITY_DEFAULTS, SLO_DEFAULTS,
+                     decide_pair_affinity_py, decide_pair_py,
+                     decide_pair_slo_py)
 
 
 @dataclasses.dataclass
@@ -80,14 +88,20 @@ class RequestRouter:
                  monitor: Optional[ClusterMonitor] = None,
                  hedge_factor: float = 3.0, mode: str = "threshold",
                  slo_params: Optional[Sequence[float]] = None,
-                 slo_table=DEFAULT_SLO_TABLE):
-        assert mode in ("threshold", "slo")
+                 slo_table=DEFAULT_SLO_TABLE,
+                 affinity_params: Optional[Sequence[float]] = None,
+                 cache_block: int = 16):
+        assert mode in ("threshold", "slo", "affinity")
         self.cluster = cluster
         self.arrays: ClusterArrays = cluster.to_arrays()
         self.thresholds = np.asarray(thresholds, np.float32)
         self.mode = mode
         self.slo_params = np.asarray(
             SLO_DEFAULTS if slo_params is None else slo_params, np.float32)
+        self.affinity_params = np.asarray(
+            AFFINITY_DEFAULTS if affinity_params is None else affinity_params,
+            np.float32)
+        self.cache_block = cache_block
         self._slo_ttft, self._slo_tpot = slo_arrays(slo_table)
         self.monitor = monitor or ClusterMonitor(len(cluster.nodes))
         self.hedge_factor = hedge_factor
@@ -117,22 +131,38 @@ class RequestRouter:
         masked_queue = [q if healthy[j] else 10 ** 6
                         for j, q in enumerate(queue)]
 
-        if self.mode == "slo":
+        if self.mode in ("slo", "affinity"):
             est = request_pair_estimates(req.prompt_tokens,
                                          req.resp_tokens_mean,
                                          req.query_bytes, self._np_arrays)
             # unhealthy nodes: push their pairs out of feasibility
             dead = ~np.asarray(healthy)[self._pair_node]
             up = np.where(dead, np.float32(1e9), est["up"])
-            pair = decide_pair_slo_py(
-                self.slo_params,
-                ttft_deadline=(ttft_deadline if ttft_deadline is not None
-                               else float(self._slo_ttft[pred_cat])),
-                tpot_deadline=(tpot_deadline if tpot_deadline is not None
-                               else float(self._slo_tpot[pred_cat])),
-                up=up, prefill=est["prefill"], tpot=est["tpot"],
-                cost=est["cost"], queue_len=masked_queue,
-                arrays=self._np_arrays)
+            ttft_dl = (ttft_deadline if ttft_deadline is not None
+                       else float(self._slo_ttft[pred_cat]))
+            tpot_dl = (tpot_deadline if tpot_deadline is not None
+                       else float(self._slo_tpot[pred_cat]))
+            if self.mode == "affinity":
+                hit_node = self.monitor.hit_fractions(
+                    getattr(req, "session_id", -1),
+                    getattr(req, "sys_id", -1), float(req.prompt_tokens),
+                    float(getattr(req, "sys_tokens", 0)),
+                    block=self.cache_block)
+                pair = decide_pair_affinity_py(
+                    self.affinity_params, ttft_deadline=ttft_dl,
+                    tpot_deadline=tpot_dl, up=up, prefill=est["prefill"],
+                    tpot=est["tpot"], cost=est["cost"],
+                    prompt_cost=est["prompt_cost"],
+                    hit_frac=np.asarray(hit_node,
+                                        np.float32)[self._pair_node],
+                    queue_len=masked_queue, arrays=self._np_arrays)
+            else:
+                pair = decide_pair_slo_py(
+                    self.slo_params, ttft_deadline=ttft_dl,
+                    tpot_deadline=tpot_dl,
+                    up=up, prefill=est["prefill"], tpot=est["tpot"],
+                    cost=est["cost"], queue_len=masked_queue,
+                    arrays=self._np_arrays)
         else:
             pair = decide_pair_py(self.thresholds, complexity=c_i,
                                   pred_category=pred_cat, pred_conf=conf,
@@ -235,7 +265,8 @@ class RequestRouter:
         from ..workload.trace import trace_from_requests
         from .fitness import EvalConfig, TraceEvaluator
         from .nsga2 import NSGA2, NSGA2Config, archive_init
-        from .policy import (BOUNDS_HI, BOUNDS_LO, SLO_BOUNDS_HI,
+        from .policy import (AFFINITY_BOUNDS_HI, AFFINITY_BOUNDS_LO,
+                             BOUNDS_HI, BOUNDS_LO, SLO_BOUNDS_HI,
                              SLO_BOUNDS_LO)
 
         if not force and not self.should_reoptimize(drift_threshold,
@@ -266,21 +297,28 @@ class RequestRouter:
                 [o.ttft_deadline for o in obs], np.float32)
             trace.tpot_deadline = np.asarray(
                 [o.tpot_deadline for o in obs], np.float32)
-        elif self.mode == "slo":
-            # slo genomes are meaningless against +inf deadlines (every
-            # [γ, κ] is equally feasible -> degenerate flat fitness): fall
-            # back to the same per-category table defaults route() applies
+        elif self.mode in ("slo", "affinity"):
+            # slo/affinity genomes are meaningless against +inf deadlines
+            # (every [γ, κ(, ρ)] is equally feasible -> degenerate flat
+            # fitness): fall back to the per-category table defaults
+            # route() applies
             cat = trace.pred_category
             trace.ttft_deadline = self._slo_ttft[cat].astype(np.float32)
             trace.tpot_deadline = self._slo_tpot[cat].astype(np.float32)
 
         cfg_eval = EvalConfig(
             mode="open" if arrivals is not None else "queued",
-            concurrency=concurrency)
+            concurrency=concurrency,
+            # re-fit against the cache dynamics the window actually had
+            prefix_cache=(arrivals is not None and trace.has_sessions),
+            cache_block=self.cache_block)
         evaluator = TraceEvaluator(trace, self.cluster, cfg_eval)
 
         if self.mode == "slo":
             genome_kind, lo, hi = "slo", SLO_BOUNDS_LO, SLO_BOUNDS_HI
+        elif self.mode == "affinity":
+            genome_kind, lo, hi = ("affinity", AFFINITY_BOUNDS_LO,
+                                   AFFINITY_BOUNDS_HI)
         else:
             genome_kind, lo, hi = "continuous", BOUNDS_LO, BOUNDS_HI
         cfg = NSGA2Config(pop_size=pop_size, n_generations=generations,
@@ -301,6 +339,8 @@ class RequestRouter:
         params = np.asarray(genome, np.float32)
         if self.mode == "slo":
             self.slo_params = params
+        elif self.mode == "affinity":
+            self.affinity_params = params
         else:
             self.thresholds = params
         # cooldown: re-arm the drift detector for the *next* regime shift

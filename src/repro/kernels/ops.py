@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import decode_attention as _dec
 from . import dominance as _dom
 from . import flash_attention as _fa
+from . import paged_attention as _paged
 from . import ref
 
 _MODES = ("auto", "pallas", "interpret", "ref")
@@ -70,3 +71,16 @@ def gqa_decode_attention(q, k_cache, v_cache, kv_len, mode: str = "auto",
     return _dec.gqa_decode_attention(q, k_cache, v_cache, kv_len,
                                      block_k=block_k,
                                      interpret=(m == "interpret"))
+
+
+def paged_gqa_decode_attention(q, k_pool, v_pool, block_table, kv_len,
+                               mode: str = "auto") -> jax.Array:
+    """Decode attention over a paged KV pool addressed by a per-request
+    block table (see ``serving.kvcache``). Pool-resident decode path for
+    prefix-reuse serving on TPU; jnp gather+reference elsewhere."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.paged_gqa_decode(q, k_pool, v_pool, block_table, kv_len)
+    return _paged.paged_gqa_decode_attention(q, k_pool, v_pool, block_table,
+                                             kv_len,
+                                             interpret=(m == "interpret"))

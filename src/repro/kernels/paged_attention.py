@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: paged GQA decode attention (vLLM-style block tables).
+
+The paged-KV serving path (``serving.kvcache``) stores K/V in fixed-size
+blocks shared between requests; a slot's logical cache is the sequence of
+physical blocks named by its **block table**. This kernel runs the decode
+attention of ``decode_attention.py`` directly over the pool — no host-side
+gather into a contiguous cache — by resolving the physical block id *in the
+BlockSpec index map* via scalar prefetch: the block table and ``kv_len``
+ride in SMEM, so each grid cell's K/V DMA is issued straight from
+``pool[block_table[b, ib]]``.
+
+Same online-softmax/GQA-folding scheme as the contiguous kernel (one
+(G, D) × (D, BS) MXU pass per block, K/V tile loaded once per KV group);
+fully-dead blocks (``ib * block_size >= kv_len``) are skipped before their
+DMA is issued, so a mostly-empty block table costs nothing. Parity-tested in
+interpret mode against both the jnp oracle and the contiguous kernel on a
+gathered cache (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(kv_len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, block_size: int, n_b: int,
+                  scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kv_len_ref[b]
+    k_start = ib * block_size
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (BS, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, BS)
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot(p, v,
+                                      preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ib == n_b - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_table: jax.Array,
+                               kv_len: jax.Array, *,
+                               interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v_pool: (n_blocks, Hkv, block_size, D);
+    block_table: (B, max_blocks) int32 physical block per logical position
+    (entries past ``ceil(kv_len / block_size)`` may hold any valid id — their
+    scores are masked); kv_len: (B,) int32 valid lengths.
+    """
+    B, Hq, D = q.shape
+    Hkv, block_size = k_pool.shape[1], k_pool.shape[2]
+    n_b = block_table.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    bt = jnp.maximum(block_table.astype(jnp.int32), 0)  # pad slots -> block 0
+    kernel = functools.partial(_paged_kernel, block_size=block_size, n_b=n_b,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, ib, kv_len, bt: (b, h, 0, 0)),
+            # the paged gather: physical block id resolved in the index map
+            pl.BlockSpec((1, 1, block_size, D),
+                         lambda b, h, ib, kv_len, bt: (bt[b, ib], h, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, D),
+                         lambda b, h, ib, kv_len, bt: (bt[b, ib], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ib, kv_len, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), bt, qg, k_pool, v_pool)
+    return out.reshape(B, Hq, D)

@@ -57,6 +57,25 @@ def mha_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_gqa_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_table: jax.Array, kv_len: jax.Array,
+                     scale: float | None = None) -> jax.Array:
+    """Paged decode attention oracle: gather the block table back into a
+    contiguous cache, then run :func:`gqa_decode`.
+
+    q: (B, Hq, D); k/v_pool: (n_blocks, Hkv, block_size, D); block_table:
+    (B, max_blocks) int32 (pad entries may be any valid id); kv_len: (B,).
+    """
+    bt = jnp.maximum(block_table.astype(jnp.int32), 0)
+
+    def gather(pool):
+        g = jnp.take(pool, bt, axis=0)          # (B, nb, Hkv, bs, D)
+        B, nb, Hkv, bs, D = g.shape
+        return jnp.transpose(g, (0, 2, 1, 3, 4)).reshape(B, Hkv, nb * bs, D)
+
+    return gqa_decode(q, gather(k_pool), gather(v_pool), kv_len, scale=scale)
+
+
 def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                kv_len: jax.Array, scale: float | None = None) -> jax.Array:
     """Single-token decode attention over a (possibly padded) KV cache.

@@ -139,9 +139,11 @@ _CHUNKED_THRESHOLD = 4096
 _Q_CHUNK = 512
 
 
-def _xla_attention(q, k, v, causal: bool) -> jax.Array:
+def _xla_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
     """(B, S, H, D) attention via XLA einsums; q-chunked beyond threshold so
-    the (B, H, Sq, Sk) score tensor never exceeds ~chunk×S per head."""
+    the (B, H, Sq, Sk) score tensor never exceeds ~chunk×S per head.
+    ``q_offset`` is the global position of query row 0 (prefix-extension
+    prefill attends suffix queries over prefix+suffix keys)."""
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
     group = Hq // Hkv
@@ -163,7 +165,7 @@ def _xla_attention(q, k, v, causal: bool) -> jax.Array:
         return accum_dot("bhgqk,bhkd->bhgqd", w.astype(vh.dtype), vh)
 
     if Sq <= _CHUNKED_THRESHOLD:
-        out = block(qh, 0)
+        out = block(qh, q_offset)
     else:
         n = Sq // _Q_CHUNK
         qc = qh.reshape(B, Hkv, group, n, _Q_CHUNK, D)
@@ -171,7 +173,7 @@ def _xla_attention(q, k, v, causal: bool) -> jax.Array:
         def body(i, acc):
             o = block(jax.lax.dynamic_index_in_dim(qc, i, axis=3,
                                                    keepdims=False),
-                      i * _Q_CHUNK)
+                      q_offset + i * _Q_CHUNK)
             return jax.lax.dynamic_update_index_in_dim(acc, o, i, axis=3)
 
         acc0 = jnp.zeros((B, Hkv, group, n, _Q_CHUNK, D), jnp.float32)
@@ -214,6 +216,31 @@ def attention_prefill_cache(p, cfg: ModelConfig, x, positions
     B, S = x.shape[:2]
     y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.q_dim), p["wo"]["w"])
     return y, (k, v)
+
+
+def attention_prefill_extend(p, cfg: ModelConfig, x, positions, prefix_kv
+                             ) -> Tuple[jax.Array,
+                                        Tuple[jax.Array, jax.Array]]:
+    """Prefill the suffix of a prompt whose prefix K/V is already cached.
+
+    x: (B, S_new, d) suffix activations; positions: (1, S_new) absolute
+    positions starting at the prefix length; prefix_kv: (k, v) each
+    (B, S_pre, Hkv, D). Returns (y, (k_full, v_full)) where the cache covers
+    prefix + suffix. Exactness: suffix rows see bitwise the same keys/values
+    and causal mask a full-prompt ``attention_prefill_cache`` would compute,
+    so prefix reuse cannot perturb the sampled tokens.
+    """
+    k_pre, v_pre = prefix_kv
+    S_pre = k_pre.shape[1]
+    q, k, v = _qkv(p, cfg, x, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k_full = jnp.concatenate([k_pre, k], axis=1)
+    v_full = jnp.concatenate([v_pre, v], axis=1)
+    out = _xla_attention(q, k_full, v_full, causal=True, q_offset=S_pre)
+    B, S = x.shape[:2]
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.q_dim), p["wo"]["w"])
+    return y, (k_full, v_full)
 
 
 def attention_decode(p, cfg: ModelConfig, x, cache, pos,

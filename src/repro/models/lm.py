@@ -356,6 +356,68 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: Optional[int] = None,
     return logits, cache
 
 
+def prefill_extend(params, cfg: ModelConfig, batch, prefix,
+                   max_seq: Optional[int] = None):
+    """Prefill only the uncached suffix of a prompt (paged prefix reuse).
+
+    ``batch["tokens"]`` holds the (B, S_new) suffix; ``prefix`` is a tuple
+    over pattern positions of (k, v), each (P, B, S_pre, Hkv, D) — the cached
+    whole-block prefix gathered by ``serving.kvcache.PagedKVStore``. Returns
+    (last-token logits, Cache) covering prefix + suffix, exactly as
+    ``prefill`` on the concatenated prompt would (suffix queries attend the
+    cached keys under the same causal mask, so outputs are bit-identical).
+
+    Pure-attention patterns only: recurrent mixers carry no position-sliceable
+    prefix state (the serving engine gates paged mode on the same predicate).
+    """
+    assert all(mixer == "attn" for mixer, _ in cfg.pattern), \
+        "prefill_extend supports pure-attention block patterns"
+    tokens = batch["tokens"]
+    B, Sn = tokens.shape
+    S_pre = prefix[0][0].shape[2]
+    total = S_pre + Sn
+    max_seq = max_seq or total
+    x = L.embed(params["embed"], tokens)
+    positions = S_pre + jnp.arange(Sn)[None, :]
+
+    def period_body(x, sl):
+        stacked, pref = sl
+        new_kv = []
+        aux = jnp.float32(0.0)
+        x = constrain(x, "dp", None, None)
+        for i, (mixer, ffn) in enumerate(cfg.pattern):
+            p = stacked[i]
+            h = L.apply_norm(cfg, p["norm1"], x)
+            y, kv = L.attention_prefill_extend(p["mixer"], cfg, h, positions,
+                                               pref[i])
+            x = x + y
+            new_kv.append(kv)
+            if ffn == "dense":
+                x = x + L.ffn_apply(p["ffn"], L.apply_norm(cfg, p["norm2"], x),
+                                    activation=cfg.activation)
+            elif ffn == "moe":
+                y2, aux2 = M.moe_apply(p["ffn"], cfg,
+                                       L.apply_norm(cfg, p["norm2"], x))
+                x = x + y2
+                aux = aux + aux2
+        return x, tuple(new_kv)
+
+    x, caches = jax.lax.scan(lambda c, sl: period_body(c, sl), x,
+                             (params["blocks"], prefix))
+    x = (L.apply_norm(cfg, params["final_norm"], x) if cfg.norm == "rmsnorm"
+         else L.layer_norm(params["final_norm"], x, cfg.norm_eps))
+    head = params.get("head", params["embed"])
+    logits = L.unembed(head, x[:, -1:])[:, 0]
+
+    layer_caches = tuple((_pad_cache(k, max_seq), _pad_cache(v, max_seq))
+                         for k, v in caches)
+    cache = Cache(layer=layer_caches,
+                  cross=tuple(() for _ in cfg.pattern), enc=None,
+                  kv_len=jnp.full((B,), total, jnp.int32),
+                  pos=jnp.int32(total))
+    return logits, cache
+
+
 def _pad_cache(k, max_seq):
     """(P_rep, B, S, H, D) -> padded to max_seq along S."""
     pad = max_seq - k.shape[2]

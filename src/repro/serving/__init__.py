@@ -1,4 +1,6 @@
 from .engine import EngineConfig, LLMEngine
+from .kvcache import BlockPool, PagedKVCache, PagedKVStore, RadixIndex
 from .scheduler import ClusterServer, ServeRequest
 
-__all__ = ["LLMEngine", "EngineConfig", "ClusterServer", "ServeRequest"]
+__all__ = ["LLMEngine", "EngineConfig", "ClusterServer", "ServeRequest",
+           "BlockPool", "RadixIndex", "PagedKVCache", "PagedKVStore"]

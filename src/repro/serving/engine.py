@@ -23,6 +23,14 @@ discrete clock advanced by ``step``): ``submit_step``/``first_token_step``/
 the prefill emits the first token) and ``tpot_steps`` (decode iterations per
 generated token after the first). These are the serving-layer ground truth
 the analytical TTFT/TPOT tables in ``core.fitness`` model.
+
+**Prefix reuse** (``EngineConfig.prefix_cache``): admission looks up the
+longest cached whole-block prefix of the prompt in a paged KV store
+(``serving.kvcache``), runs ``lm.prefill_extend`` on only the uncached
+suffix, and caches the freshly computed whole blocks for later requests.
+Reuse is exact — output tokens are bit-identical to the non-caching engine —
+while ``cache_stats()["prefill_tokens_run"]`` drops with every shared
+prefix (multi-turn sessions, shared system prompts).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import numpy as np
 
 from ..models import lm
 from ..models.config import ModelConfig
+from .kvcache import CacheStats, PagedKVStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +54,10 @@ class EngineConfig:
     max_new_tokens: int = 16
     eos_token: int = -1            # -1: never (synthetic vocab)
     prefill_bucket: int = 32       # prompts padded up to a bucket multiple
+    # paged prefix reuse (pure-attention patterns only)
+    prefix_cache: bool = False
+    block_size: int = 8            # tokens per KV block
+    cache_blocks: int = 64         # pool capacity (blocks)
 
 
 @dataclasses.dataclass
@@ -54,6 +67,7 @@ class _Slot:
     budget: int = 0
     submit_step: int = 0       # engine step at submit()
     first_token_step: int = 0  # engine step when prefill emitted token 0
+    block_ids: List[int] = dataclasses.field(default_factory=list)
 
 
 class LLMEngine:
@@ -70,6 +84,9 @@ class LLMEngine:
         self._decode = jax.jit(
             lambda params, tok, cache: lm.decode_step(params, cfg, tok, cache))
         self._steps = 0
+        self.kv: Optional[PagedKVStore] = (
+            PagedKVStore(cfg, ecfg.cache_blocks, ecfg.block_size)
+            if ecfg.prefix_cache else None)
 
     # -- public API -----------------------------------------------------------
     def submit(self, request_id: int, tokens: np.ndarray,
@@ -99,7 +116,7 @@ class LLMEngine:
             if s.budget <= 0 or tok == self.ecfg.eos_token:
                 self.results[s.request_id] = self._result(s, self._steps + 1)
                 retired.append(s.request_id)
-                self.slots[i] = _Slot()
+                self._release_slot(i)
         self._steps += 1
         if retired:
             self._admit()
@@ -114,7 +131,7 @@ class LLMEngine:
         request and to purge zombies from a crashed node's engine."""
         for i, s in enumerate(self.slots):
             if s.request_id == request_id:
-                self.slots[i] = _Slot()
+                self._release_slot(i)
                 self._admit()
                 return True
         for k, item in enumerate(self.queue):
@@ -141,7 +158,36 @@ class LLMEngine:
     def queue_len(self) -> int:
         return self.active_count + len(self.queue)
 
+    def cache_stats(self) -> dict:
+        """Prefix-cache counters (zeros when paged reuse is disabled)."""
+        st = self.kv.cache.stats if self.kv is not None else CacheStats()
+        return st.as_dict()
+
+    def flush_kv(self) -> None:
+        """Simulated node restart: drop every cached KV block. Active slots
+        keep decoding — their contiguous caches own a gathered copy — but
+        their block pins go down with the pool, so nothing dangles."""
+        if self.kv is None:
+            return
+        for s in self.slots:
+            s.block_ids = []
+        self.kv = PagedKVStore(self.cfg, self.ecfg.cache_blocks,
+                               self.ecfg.block_size)
+
     # -- internals -------------------------------------------------------------
+    def _release_slot(self, i: int) -> None:
+        """Retire/cancel slot ``i``: drop its KV-block references and zero its
+        ``kv_len`` so ``decode_step`` stops attending over the dead slot's KV
+        (stale lengths previously kept streaming the dead cache until the
+        slot's next reuse)."""
+        s = self.slots[i]
+        if self.kv is not None and s.block_ids:
+            self.kv.cache.release(s.block_ids)
+        self.slots[i] = _Slot()
+        self.cache = self.cache._replace(
+            kv_len=self.cache.kv_len.at[i].set(0))
+        self._next_token = self._next_token.at[i, 0].set(0)
+
     def _result(self, s: "_Slot", finish_step: int) -> dict:
         n_decode = max(len(s.generated) - 1, 0)  # token 0 comes from prefill
         return {
@@ -178,21 +224,55 @@ class LLMEngine:
         e = self.ecfg
         L = len(tokens)
         assert L + budget <= e.max_seq, "request exceeds engine max_seq"
-        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
-        if self.cfg.family == "audio":
-            batch["frames"] = jnp.asarray(
-                extra.get("frames",
-                          np.zeros((1, self.cfg.encoder.n_frames,
-                                    self.cfg.d_model), np.float32)),
-                jnp.bfloat16)
-        if self.cfg.family == "vlm":
-            batch["patches"] = jnp.asarray(
-                extra.get("patches",
-                          np.zeros((1, self.cfg.cross_kv_tokens,
-                                    self.cfg.d_model), np.float32)),
-                jnp.bfloat16)
-        logits, cache1 = lm.prefill(self.params, self.cfg, batch,
-                                    max_seq=e.max_seq)
+        matched: List[int] = []
+        if self.kv is not None:
+            matched = self.kv.cache.match(tokens)
+            self.kv.cache.acquire(matched)
+        prefix_len = len(matched) * (self.kv.block_size if self.kv else 0)
+        if prefix_len:
+            logits, cache1 = lm.prefill_extend(
+                self.params, self.cfg,
+                {"tokens": jnp.asarray(tokens[prefix_len:], jnp.int32)[None]},
+                self.kv.gather(matched), max_seq=e.max_seq)
+        else:
+            batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+            if self.cfg.family == "audio":
+                batch["frames"] = jnp.asarray(
+                    extra.get("frames",
+                              np.zeros((1, self.cfg.encoder.n_frames,
+                                        self.cfg.d_model), np.float32)),
+                    jnp.bfloat16)
+            if self.cfg.family == "vlm":
+                batch["patches"] = jnp.asarray(
+                    extra.get("patches",
+                              np.zeros((1, self.cfg.cross_kv_tokens,
+                                        self.cfg.d_model), np.float32)),
+                    jnp.bfloat16)
+            logits, cache1 = lm.prefill(self.params, self.cfg, batch,
+                                        max_seq=e.max_seq)
+        block_ids = matched
+        if self.kv is not None:
+            st = self.kv.cache.stats
+            st.prefill_tokens_total += L
+            st.prefill_tokens_run += L - prefix_len
+            # cache the freshly prefilled whole-block suffix chunks. Start
+            # past every chunk the index already holds, not just the capped
+            # match: when the whole prompt is cached, match() drops the last
+            # block to leave a suffix to prefill, and re-allocating (possibly
+            # evicting a live leaf for) that chunk's duplicate would only be
+            # thrown away by commit().
+            cached = self.kv.cache.index.match(tokens)
+            new_ids: List[int] = []
+            for _ in range(len(cached), L // self.kv.block_size):
+                bid = self.kv.cache.allocate()
+                if bid is None:   # pool exhausted: serve uncached, no caching
+                    break
+                new_ids.append(bid)
+            if new_ids:
+                self.kv.scatter(new_ids, len(cached), cache1.layer)
+                n_tok = (len(cached) + len(new_ids)) * self.kv.block_size
+                self.kv.cache.commit(tokens[:n_tok], cached + new_ids)
+            block_ids = matched + new_ids
         # splice single-request cache into batch cache at `slot`
         def splice(full, one):
             if full.ndim < 2:
@@ -211,7 +291,8 @@ class LLMEngine:
         s.budget = budget - 1
         s.submit_step = submit_step
         s.first_token_step = self._steps
+        s.block_ids = block_ids
         self._next_token = self._next_token.at[slot, 0].set(first)
         if s.budget <= 0:
             self.results[request_id] = self._result(s, self._steps)
-            self.slots[slot] = _Slot()
+            self._release_slot(slot)

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -56,11 +57,15 @@ class _Flight:
 class ClusterServer:
     def __init__(self, cluster: ClusterSpec, model_builders: Dict[str, tuple],
                  thresholds, engine_cfg: EngineConfig = EngineConfig(),
-                 hedge_after: int = 64, vocab_cap: Optional[int] = None):
-        """model_builders: model name -> (ModelConfig, params)."""
+                 hedge_after: int = 64, vocab_cap: Optional[int] = None,
+                 router_kwargs: Optional[dict] = None):
+        """model_builders: model name -> (ModelConfig, params).
+        router_kwargs: extra RequestRouter arguments (e.g.
+        ``mode="affinity"`` for cache-affinity dispatch)."""
         self.cluster = cluster
         self.monitor = ClusterMonitor(len(cluster.nodes))
-        self.router = RequestRouter(cluster, thresholds, monitor=self.monitor)
+        self.router = RequestRouter(cluster, thresholds, monitor=self.monitor,
+                                    **(router_kwargs or {}))
         self.engines: Dict[int, LLMEngine] = {}
         self.pair_model_cfg: Dict[int, object] = {}
         for p, (j, k) in enumerate(cluster.pairs()):
@@ -76,10 +81,25 @@ class ClusterServer:
         self.ticks = 0   # simulated scheduler clock: one unit per step()
 
     # -- helpers ---------------------------------------------------------------
-    def _tokenize(self, req: Request, vocab: int) -> np.ndarray:
-        rng = np.random.default_rng(abs(hash(req.text)) % (2 ** 31))
-        n = min(max(4, req.prompt_tokens), 24)
-        return rng.integers(0, vocab, size=n, dtype=np.int32)
+    def _tokenize(self, req: Request, vocab: int, cap: int = 24) -> np.ndarray:
+        """Deterministic, **prefix-stable** word-level tokenization.
+
+        Each whitespace word hashes independently via ``zlib.crc32`` — stable
+        across processes (``hash()`` is salted by PYTHONHASHSEED, which made
+        served token streams, and thus every prefix-cache hit, irreproducible
+        between runs) and prefix-preserving: a prompt that textually extends
+        another maps to a token stream extending the other's, which is what
+        lets the engine's paged KV cache reuse earlier turns of a session.
+        """
+        words = req.text.split()
+        # never pad past the real words (position-keyed filler would break
+        # the extension property when a longer prompt's words displace it);
+        # only a fully empty prompt gets a single placeholder token
+        n = min(max(4, req.prompt_tokens), cap, len(words))
+        toks = [zlib.crc32(w.encode()) % vocab for w in words[:n]]
+        if not toks:
+            toks = [zlib.crc32(b"<empty>") % vocab]
+        return np.asarray(toks, np.int32)
 
     def _dispatch(self, sreq: ServeRequest, pair: int):
         eng = self.engines[pair]
@@ -88,6 +108,19 @@ class ClusterServer:
                    max_new_tokens=sreq.max_new_tokens)
         node = int(np.asarray(self.router.arrays.pair_node)[pair])
         self.monitor.on_dispatch(node)
+        # keep the monitor's prefix-cache view in sync with what this node's
+        # engine now holds (cache-affinity routing reads it)
+        req = sreq.req
+        blk = self.router.cache_block
+        sid = getattr(req, "session_id", -1)
+        if sid >= 0:
+            self.monitor.record_prefix(
+                node, ("sess", sid), int(req.prompt_tokens) // blk * blk)
+        yid = getattr(req, "sys_id", -1)
+        if yid >= 0:
+            self.monitor.record_prefix(
+                node, ("sys", yid),
+                int(getattr(req, "sys_tokens", 0)) // blk * blk)
 
     # -- public ------------------------------------------------------------------
     def submit(self, sreq: ServeRequest):
@@ -98,8 +131,11 @@ class ClusterServer:
     def fail_node(self, node: int):
         """Crash a node: mask it and re-route its in-flight requests. The
         dead copy is cancelled from its engine (no zombie completion after
-        recovery) and its dispatch accounting closed as a failure."""
+        recovery), its dispatch accounting closed as a failure, and the
+        node's KV caches flushed — a restarted node holds no prefixes, so
+        neither may the monitor's residency view nor its engines' pools."""
         self.monitor.mark_down(node)
+        self.monitor.drop_prefixes(node)
         pair_node = np.asarray(self.router.arrays.pair_node)
         for rid, fl in list(self.inflight.items()):
             hedge_dead = (fl.hedge_pair is not None
@@ -118,6 +154,10 @@ class ClusterServer:
                 self.inflight[rid] = _Flight(sreq=fl.sreq, pair=decision.pair,
                                              iters=fl.iters,
                                              hedge_pair=fl.hedge_pair)
+        # dead copies are cancelled above, so no slot still pins a block
+        for pair, eng in self.engines.items():
+            if int(pair_node[pair]) == node:
+                eng.flush_kv()
 
     def recover_node(self, node: int, now: Optional[float] = None):
         """Heartbeat the node back to life at simulated-scheduler time (or an

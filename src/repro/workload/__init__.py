@@ -1,8 +1,10 @@
 from .arrivals import (PhaseSpec, build_open_loop_trace, mmpp_arrivals,
                        onoff_arrivals, poisson_arrivals)
+from .sessions import SessionConfig, build_session_trace, session_requests
 from .trace import Trace, build_trace, trace_from_requests
 from .tokenizer import count_tokens
 
 __all__ = ["Trace", "build_trace", "trace_from_requests", "count_tokens",
            "PhaseSpec", "build_open_loop_trace", "mmpp_arrivals",
-           "onoff_arrivals", "poisson_arrivals"]
+           "onoff_arrivals", "poisson_arrivals", "SessionConfig",
+           "build_session_trace", "session_requests"]

@@ -55,6 +55,13 @@ class Trace:
     # None = closed-loop trace.
     arrival_time: Optional[np.ndarray] = None    # (I,) float32
     phase_id: Optional[np.ndarray] = None        # (I,) int32 workload phase
+    # Optional multi-turn session identity (workload.sessions): session id
+    # (-1 = single-shot), shared-system-prompt class, and the token length of
+    # that shared prefix — what the prefix-cache model in core.fitness /
+    # cluster.simulator keys hit state on.
+    group_id: Optional[np.ndarray] = None        # (I,) int32 session id
+    sys_id: Optional[np.ndarray] = None          # (I,) int32 system-prompt id
+    sys_tokens: Optional[np.ndarray] = None      # (I,) float32
 
     @property
     def n_requests(self) -> int:
@@ -67,6 +74,10 @@ class Trace:
     @property
     def has_arrivals(self) -> bool:
         return self.arrival_time is not None
+
+    @property
+    def has_sessions(self) -> bool:
+        return self.group_id is not None
 
 
 def trace_from_requests(reqs: List[ds.Request], seed: int = 0,
@@ -104,11 +115,23 @@ def trace_from_requests(reqs: List[ds.Request], seed: int = 0,
         assert (np.diff(arrival_time) >= 0).all(), \
             "open-loop arrival times must be sorted ascending"
 
-    return Trace(requests=reqs, task=task, pred_category=pred_cat,
-                 pred_conf=pred_conf, complexity=complexity,
-                 prompt_tokens=prompt_tokens, resp_tokens_mean=resp_mean,
-                 difficulty=difficulty, query_bytes=qbytes,
-                 arrival_time=arrival_time)
+    trace = Trace(requests=reqs, task=task, pred_category=pred_cat,
+                  pred_conf=pred_conf, complexity=complexity,
+                  prompt_tokens=prompt_tokens, resp_tokens_mean=resp_mean,
+                  difficulty=difficulty, query_bytes=qbytes,
+                  arrival_time=arrival_time)
+    # requests generated by workload.sessions carry session identity; lift it
+    # into trace arrays so the prefix-cache model (fitness/simulator) and the
+    # router's history re-fit see it without a separate side channel
+    if any(getattr(r, "session_id", -1) >= 0
+           or getattr(r, "sys_id", -1) >= 0 for r in reqs):
+        trace.group_id = np.asarray(
+            [getattr(r, "session_id", -1) for r in reqs], np.int32)
+        trace.sys_id = np.asarray(
+            [getattr(r, "sys_id", -1) for r in reqs], np.int32)
+        trace.sys_tokens = np.asarray(
+            [getattr(r, "sys_tokens", 0) for r in reqs], np.float32)
+    return trace
 
 
 def build_trace(n_requests: int = 500, seed: int = 0) -> Trace:

@@ -9,6 +9,7 @@ from _hypothesis_compat import given, settings, st  # soft optional dep
 import repro.kernels.decode_attention as dec
 import repro.kernels.dominance as dom
 import repro.kernels.flash_attention as fa
+import repro.kernels.paged_attention as paged
 from repro.kernels import ops, ref
 
 # ---------------------------------------------------------------------------
@@ -153,6 +154,96 @@ def test_decode_attention_kv_len_property(seed):
     b = dec.gqa_decode_attention(q, kc2, vc2, kv_len, block_k=64,
                                  interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table gather, see serving.kvcache)
+# ---------------------------------------------------------------------------
+PAGED_CASES = [
+    # (B, Hq, Hkv, n_blocks, block_size, max_blocks, D)
+    (1, 8, 8, 16, 16, 4, 64),     # MHA
+    (2, 8, 2, 24, 16, 4, 64),     # GQA 4:1
+    (3, 4, 1, 12, 8, 6, 32),      # MQA, small blocks
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,nb,bs,mb,D", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_ref(B, Hq, Hkv, nb, bs, mb, D, dtype):
+    rng = np.random.default_rng(B * 100 + Hq)
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), dtype)
+    kp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), dtype)
+    vp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), dtype)
+    # distinct physical blocks per row (blocks are shared across rows in
+    # serving, but distinctness makes aliasing bugs visible)
+    bt = jnp.asarray(np.stack([rng.choice(nb, mb, replace=False)
+                               for _ in range(B)]), jnp.int32)
+    kv_len = jnp.asarray(rng.integers(1, mb * bs + 1, B), jnp.int32)
+    got = paged.paged_gqa_decode_attention(q, kp, vp, bt, kv_len,
+                                           interpret=True)
+    want = ref.paged_gqa_decode(q, kp, vp, bt, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_decode_matches_contiguous_kernel_on_gathered_cache():
+    """The paged kernel gathering through the block table must agree with
+    the contiguous kernel on the explicitly gathered cache — same online-
+    softmax math, different addressing."""
+    rng = np.random.default_rng(7)
+    B, Hq, Hkv, D, bs, nb, mb = 2, 8, 2, 64, 16, 24, 4
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    bt = jnp.asarray(np.stack([rng.choice(nb, mb, replace=False)
+                               for _ in range(B)]), jnp.int32)
+    kv_len = jnp.asarray([9, mb * bs], jnp.int32)
+    got = paged.paged_gqa_decode_attention(q, kp, vp, bt, kv_len,
+                                           interpret=True)
+
+    def gather(pool):
+        g = jnp.take(pool, bt, axis=0)
+        return jnp.transpose(g, (0, 2, 1, 3, 4)).reshape(B, Hkv, mb * bs, D)
+
+    cont = dec.gqa_decode_attention(q, gather(kp), gather(vp), kv_len,
+                                    block_k=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(cont),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_paged_decode_pad_entries_are_masked():
+    """Block-table entries beyond kv_len (and negative pads) must not
+    affect the output."""
+    rng = np.random.default_rng(11)
+    B, Hq, Hkv, D, bs, nb, mb = 1, 4, 2, 32, 8, 8, 4
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    kv_len = jnp.asarray([10], jnp.int32)      # 2 live blocks of 4
+    bt_a = jnp.asarray([[3, 5, 6, 7]], jnp.int32)
+    bt_b = jnp.asarray([[3, 5, -1, 1]], jnp.int32)   # different dead tail
+    a = paged.paged_gqa_decode_attention(q, kp, vp, bt_a, kv_len,
+                                         interpret=True)
+    b = paged.paged_gqa_decode_attention(q, kp, vp, bt_b, kv_len,
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_ops_paged_dispatch_ref_matches_interpret():
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, D, bs, nb, mb = 2, 4, 2, 32, 8, 10, 3
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, Hkv, bs, D)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, nb, (B, mb)), jnp.int32)
+    kv_len = jnp.asarray(rng.integers(1, mb * bs + 1, B), jnp.int32)
+    a = ops.paged_gqa_decode_attention(q, kp, vp, bt, kv_len, mode="ref")
+    b = ops.paged_gqa_decode_attention(q, kp, vp, bt, kv_len,
+                                       mode="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------

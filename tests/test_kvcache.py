@@ -1,0 +1,268 @@
+"""Paged KV-cache subsystem: block-pool invariants, radix longest-prefix
+correctness, LRU eviction safety, and engine-level prefix-reuse exactness
+(paged-with-reuse output tokens must be byte-identical to the contiguous
+non-caching engine while running strictly fewer prefill tokens)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # soft optional dep
+
+from repro.configs import get
+from repro.models import lm
+from repro.serving import EngineConfig, LLMEngine
+from repro.serving.kvcache import BlockPool, PagedKVCache, RadixIndex
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+def _random_pool_workload(seed: int, n_blocks: int, n_ops: int):
+    """Drive a BlockPool through a random alloc/acquire/release schedule and
+    check invariants after every op."""
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(n_blocks)
+    held = []          # (block, cached) pins we own
+    cached = set()     # blocks the fake index would report as cached
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        if op == 0:
+            b = pool.take_free()
+            if b is None:
+                b = pool.pop_evictable(lambda blk: True)
+                if b is not None:
+                    cached.discard(b)
+            if b is not None:
+                if rng.random() < 0.5:
+                    cached.add(b)
+                held.append(b)
+        elif op == 1 and held:
+            b = held[int(rng.integers(0, len(held)))]
+            pool.acquire(b)
+            held.append(b)
+        elif op == 2 and held:
+            b = held.pop(int(rng.integers(0, len(held))))
+            pool.release(b, cached=b in cached)
+        pool.check_invariants()
+    for b in held:
+        pool.release(b, cached=b in cached)
+    pool.check_invariants()
+    assert pool.n_free + pool.n_evictable == n_blocks
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 12), st.integers(1, 120))
+@settings(max_examples=40, deadline=None)
+def test_block_pool_invariants_property(seed, n_blocks, n_ops):
+    _random_pool_workload(seed, n_blocks, n_ops)
+
+
+def test_block_pool_invariants_deterministic():
+    for seed in range(8):
+        _random_pool_workload(seed, 6, 80)
+
+
+def test_block_pool_never_evicts_referenced():
+    pool = BlockPool(2)
+    a = pool.take_free()
+    b = pool.take_free()
+    assert pool.take_free() is None
+    # both referenced: nothing evictable even if the index would allow it
+    assert pool.pop_evictable(lambda blk: True) is None
+    pool.release(a, cached=True)           # a becomes evictable
+    got = pool.pop_evictable(lambda blk: True)
+    assert got == a and pool.ref[b] == 1
+    pool.release(b, cached=False)
+    pool.release(got, cached=False)
+    pool.check_invariants()
+
+    with pytest.raises(AssertionError):
+        pool.release(a, cached=False)      # refcount would go negative
+
+
+# ---------------------------------------------------------------------------
+# radix index
+# ---------------------------------------------------------------------------
+def _brute_longest_prefix(entries, tokens, bs):
+    """Longest whole-block prefix of ``tokens`` present among ``entries``."""
+    best = 0
+    for ent in entries:
+        m = 0
+        while (m + bs <= min(len(ent), len(tokens))
+               and ent[m:m + bs] == tokens[m:m + bs]):
+            m += bs
+        best = max(best, m)
+    return best
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_radix_longest_prefix_matches_bruteforce(seed, bs, n_entries):
+    rng = np.random.default_rng(seed)
+    idx = RadixIndex(bs)
+    entries = []
+    next_block = 0
+    for _ in range(n_entries):
+        if entries and rng.random() < 0.5:  # extend an existing entry
+            base = list(entries[int(rng.integers(0, len(entries)))])
+        else:
+            base = []
+        toks = base + list(rng.integers(0, 5, size=int(rng.integers(1, 20))))
+        blocks = idx.match(toks)
+        n_new = len(toks) // bs - len(blocks)
+        new = list(range(next_block, next_block + n_new))
+        next_block += n_new
+        idx.insert(toks, blocks + new)
+        entries.append(toks)
+    for _ in range(10):
+        if entries and rng.random() < 0.7:
+            probe = list(entries[int(rng.integers(0, len(entries)))])
+            cut = int(rng.integers(0, len(probe) + 1))
+            probe = probe[:cut] + list(rng.integers(0, 5, size=6))
+        else:
+            probe = list(rng.integers(0, 5, size=int(rng.integers(0, 25))))
+        want = _brute_longest_prefix(entries, probe, bs)
+        assert len(idx.match(probe)) * bs == want
+
+
+def test_radix_only_leaves_evictable():
+    idx = RadixIndex(2)
+    toks = [1, 2, 3, 4, 5, 6]
+    idx.insert(toks, [0, 1, 2])
+    assert not idx.is_evictable(0) and not idx.is_evictable(1)
+    assert idx.is_evictable(2)
+    idx.remove(2)
+    assert idx.is_evictable(1)
+    assert idx.match(toks) == [0, 1]          # surviving prefix still matches
+
+
+def test_paged_cache_eviction_reclaims_lru_leaf():
+    kvc = PagedKVCache(n_blocks=2, block_size=2)
+    t1, t2 = [1, 2, 3], [4, 5, 6]
+    b1 = kvc.allocate()
+    kvc.commit(t1, [b1])
+    kvc.release([b1])                       # cached + unreferenced
+    b2 = kvc.allocate()
+    kvc.commit(t2, [b2])
+    kvc.release([b2])
+    kvc.check_invariants()
+    # pool is full of evictable cached blocks; a new allocation evicts b1
+    # (least recently used) and its index entry disappears with it
+    b3 = kvc.allocate()
+    assert b3 == b1
+    assert kvc.match(t1) == []
+    assert kvc.match(t2) == [b2]
+    kvc.release([b3])
+    kvc.check_invariants()
+    assert kvc.stats.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level exactness
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get("stablelm-3b").smoke()
+    params = lm.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _session_prompts(vocab: int, seed: int = 0):
+    """A 3-turn session + an agent sharing its system prefix."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(0, vocab, size=16)
+    t1 = np.concatenate([sys_prefix, rng.integers(0, vocab, size=6)])
+    t2 = np.concatenate([t1, rng.integers(0, vocab, size=9)])
+    t3 = np.concatenate([t2, rng.integers(0, vocab, size=5)])
+    other = np.concatenate([sys_prefix, rng.integers(0, vocab, size=7)])
+    return [t1, t2, t3, other]
+
+
+def test_paged_engine_matches_contiguous_and_prefills_less(tiny_model):
+    cfg, params = tiny_model
+    prompts = _session_prompts(cfg.vocab)
+
+    ref = LLMEngine(cfg, params, EngineConfig(max_slots=2, max_seq=64,
+                                              max_new_tokens=4))
+    for i, p in enumerate(prompts):
+        ref.submit(i, p, max_new_tokens=4)
+    want = ref.run_to_completion()
+
+    pag = LLMEngine(cfg, params,
+                    EngineConfig(max_slots=2, max_seq=64, max_new_tokens=4,
+                                 prefix_cache=True, block_size=8,
+                                 cache_blocks=24))
+    for i, p in enumerate(prompts):
+        pag.submit(i, p, max_new_tokens=4)
+        pag.run_to_completion()            # serialize turns so reuse can hit
+    got = pag.results
+
+    for i in range(len(prompts)):
+        assert got[i]["tokens"] == want[i]["tokens"], i
+    st = pag.cache_stats()
+    total = sum(len(p) for p in prompts)
+    assert st["prefill_tokens_total"] == total
+    assert st["prefill_tokens_run"] < total          # strictly fewer prefills
+    assert st["hits"] >= 2                           # turns 2, 3 + the agent
+    pag.kv.cache.check_invariants()
+
+
+def test_paged_engine_under_eviction_pressure_stays_exact(tiny_model):
+    """A pool far smaller than the working set must still be exact."""
+    cfg, params = tiny_model
+    prompts = _session_prompts(cfg.vocab, seed=3)
+
+    ref = LLMEngine(cfg, params, EngineConfig(max_slots=1, max_seq=64,
+                                              max_new_tokens=3))
+    pag = LLMEngine(cfg, params,
+                    EngineConfig(max_slots=1, max_seq=64, max_new_tokens=3,
+                                 prefix_cache=True, block_size=8,
+                                 cache_blocks=3))
+    for i, p in enumerate(prompts):
+        ref.submit(i, p, max_new_tokens=3)
+        pag.submit(i, p, max_new_tokens=3)
+    want = ref.run_to_completion()
+    got = pag.run_to_completion()
+    for i in range(len(prompts)):
+        assert got[i]["tokens"] == want[i]["tokens"], i
+    pag.kv.cache.check_invariants()
+
+
+def test_resubmitting_fully_cached_prompt_allocates_nothing(tiny_model):
+    """Regression: a prompt whose whole-block path is already indexed used
+    to allocate (evicting live cached leaves under a full pool) a duplicate
+    block for the chunk match() capped off, only for commit() to discard
+    it."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, size=16)      # exactly 2 full blocks
+    eng = LLMEngine(cfg, params,
+                    EngineConfig(max_slots=1, max_seq=48, max_new_tokens=2,
+                                 prefix_cache=True, block_size=8,
+                                 cache_blocks=2))     # pool exactly fits it
+    eng.submit(0, prompt, max_new_tokens=2)
+    first = eng.run_to_completion()[0]["tokens"]
+    eng.submit(1, prompt, max_new_tokens=2)
+    again = eng.run_to_completion()[1]["tokens"]
+    assert again == first
+    assert eng.cache_stats()["evictions"] == 0
+    assert eng.kv.cache.pool.n_evictable == 2         # both blocks survive
+    eng.kv.cache.check_invariants()
+
+
+def test_retired_slot_zeroes_kv_len(tiny_model):
+    """Regression: retiring/cancelling a slot used to leave ``cache.kv_len``
+    at its old value, so ``decode_step`` kept attending over the dead slot's
+    KV until the slot was reused."""
+    cfg, params = tiny_model
+    eng = LLMEngine(cfg, params, EngineConfig(max_slots=2, max_seq=64,
+                                              max_new_tokens=3))
+    rng = np.random.default_rng(0)
+    eng.submit(0, rng.integers(0, cfg.vocab, size=8), max_new_tokens=3)
+    eng.submit(1, rng.integers(0, cfg.vocab, size=12), max_new_tokens=6)
+    while 0 not in eng.results:
+        eng.step()
+    assert int(eng.cache.kv_len[0]) == 0      # retired slot zeroed
+    assert int(eng.cache.kv_len[1]) > 0       # active slot untouched
+
+    eng.cancel(1)
+    assert int(eng.cache.kv_len[1]) == 0      # cancelled slot zeroed too

@@ -163,6 +163,68 @@ def test_hedging_accounting_drains_to_zero(server_parts):
                 == s.total_completed + s.total_failed + s.total_cancelled)
 
 
+def test_cluster_server_affinity_prefix_reuse_end_to_end(server_parts):
+    """Session traffic through the affinity router into prefix-cached
+    engines: the prefix-stable tokenizer + paged KV must produce real cache
+    hits (strictly fewer prefill tokens run than submitted)."""
+    from repro.workload.sessions import SessionConfig, build_session_trace
+    cluster, builders, _ = server_parts
+    tr = build_session_trace(SessionConfig(n_sessions=4, mean_turns=3.0),
+                             seed=2)
+    srv = ClusterServer(cluster, builders, PAPER_DEFAULTS,
+                        EngineConfig(max_slots=2, max_seq=48,
+                                     max_new_tokens=2, prefix_cache=True,
+                                     block_size=8, cache_blocks=32),
+                        router_kwargs={"mode": "affinity"})
+    reqs = tr.requests[:10]
+    for i, r in enumerate(reqs):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=2))
+    done = srv.run()
+    assert sorted(done) == list(range(len(reqs)))
+    stats = [e.cache_stats() for e in srv.engines.values()]
+    assert sum(s["hits"] for s in stats) >= 1
+    assert (sum(s["prefill_tokens_run"] for s in stats)
+            < sum(s["prefill_tokens_total"] for s in stats))
+    # the monitor's residency view was populated on dispatch
+    assert any(ns.cached_prefixes for ns in srv.monitor.stats.values())
+
+    # a crashed node restarts with empty caches: both the monitor's
+    # residency view and its engines' paged pools must flush, or affinity
+    # routing keeps crediting KV that did not survive
+    node = next(n for n, ns in srv.monitor.stats.items()
+                if ns.cached_prefixes)
+    srv.fail_node(node)
+    assert not srv.monitor.stats[node].cached_prefixes
+    pair_node = np.asarray(srv.router.arrays.pair_node)
+    for p, eng in srv.engines.items():
+        if int(pair_node[p]) == node:
+            assert eng.kv.cache.pool.n_free == eng.ecfg.cache_blocks
+
+
+def test_tokenize_is_stable_and_prefix_preserving(server_parts):
+    """Regression: `abs(hash(text))` was salted per process (PYTHONHASHSEED),
+    so served token streams — and every prefix-cache hit — were
+    irreproducible across runs. crc32 word hashing is stable and maps an
+    extending prompt to an extending token stream."""
+    cluster, builders, trace = server_parts
+    srv = ClusterServer(cluster, builders, PAPER_DEFAULTS,
+                        EngineConfig(max_slots=1, max_seq=48,
+                                     max_new_tokens=2))
+    req = trace.requests[0]
+    toks = srv._tokenize(req, vocab=1000)
+    # stable: recomputing (and any other process) yields identical streams
+    np.testing.assert_array_equal(toks, srv._tokenize(req, vocab=1000))
+    import dataclasses as _dc
+    import zlib as _zlib
+    assert toks[0] == _zlib.crc32(req.text.split()[0].encode()) % 1000
+    # prefix-preserving: an extended prompt extends the token stream
+    longer = _dc.replace(req, text=req.text + " extra tail words here",
+                         prompt_tokens=req.prompt_tokens + 4)
+    toks2 = srv._tokenize(longer, vocab=1000, cap=64)
+    toks1 = srv._tokenize(req, vocab=1000, cap=64)
+    np.testing.assert_array_equal(toks2[:len(toks1)], toks1)
+
+
 def test_recover_node_uses_simulated_clock(server_parts):
     """Regression: recover_node injected wall-clock time.monotonic() into
     the monitor's simulated timeline."""

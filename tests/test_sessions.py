@@ -1,0 +1,236 @@
+"""Session workloads + cache-affinity routing: generator invariants, the
+affinity decision py/jnp oracle pair, monitor prefix state, JAX/DES
+prefix-cache equivalence, and the router's affinity mode + re-fit."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # soft optional dep
+
+from repro.cluster.monitor import ClusterMonitor
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.spec import paper_testbed
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.policy import (AFFINITY_DEFAULTS, SLO_DEFAULTS,
+                               decide_pair_affinity_jnp,
+                               decide_pair_affinity_py)
+from repro.core.router import RequestRouter
+from repro.workload.sessions import SessionConfig, build_session_trace
+from repro.workload.slo import attach_slos
+
+
+@pytest.fixture(scope="module")
+def session_trace():
+    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
+                             seed=3)
+    attach_slos(tr, tightness=2.0, seed=3)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_testbed()
+
+
+# ---------------------------------------------------------------------------
+# generator invariants
+# ---------------------------------------------------------------------------
+def test_session_prompts_extend_and_arrivals_sorted(session_trace):
+    tr = session_trace
+    assert tr.has_sessions and tr.has_arrivals
+    assert (np.diff(tr.arrival_time) >= 0).all()
+    latest = {}
+    for r in tr.requests:
+        prev = latest.get(r.session_id)
+        if prev is not None:
+            assert r.text.startswith(prev.text), \
+                "turn prompt must extend the previous turn verbatim"
+            assert r.turn == prev.turn + 1
+            assert r.prompt_tokens > prev.prompt_tokens
+        latest[r.session_id] = r
+    # agent sharing: sessions with the same sys_id share the system prefix
+    by_sys = {}
+    for r in tr.requests:
+        if r.turn == 0 and r.sys_id >= 0:
+            by_sys.setdefault(r.sys_id, []).append(r.text)
+    for sid, texts in by_sys.items():
+        if len(texts) >= 2:
+            a, b = texts[0], texts[1]
+            common = 0
+            for ca, cb in zip(a, b):
+                if ca != cb:
+                    break
+                common += 1
+            assert common >= 40, "shared system prompt must be a real prefix"
+
+
+def test_session_trace_arrays_match_requests(session_trace):
+    tr = session_trace
+    assert tr.group_id.shape == (tr.n_requests,)
+    for i, r in enumerate(tr.requests):
+        assert tr.group_id[i] == r.session_id
+        assert tr.sys_id[i] == r.sys_id
+        assert tr.sys_tokens[i] == r.sys_tokens
+
+
+# ---------------------------------------------------------------------------
+# affinity decision: numpy oracle == jnp implementation
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_affinity_decision_py_jnp_agree(seed):
+    cluster = paper_testbed()
+    arrays = cluster.to_arrays()
+    rng = np.random.default_rng(seed)
+    n_pairs, n_nodes = arrays.n_pairs, arrays.n_nodes
+    genome = rng.uniform([0.3, 0, 0], [1.1, 20, 4]).astype(np.float32)
+    kw = dict(
+        ttft_deadline=float(rng.uniform(0.1, 5.0)),
+        tpot_deadline=float(rng.uniform(0.05, 1.0)),
+        up=rng.uniform(0, 1, n_pairs).astype(np.float32),
+        prefill=rng.uniform(0, 2, n_pairs).astype(np.float32),
+        tpot=rng.uniform(0.04, 0.3, n_pairs).astype(np.float32),
+        cost=rng.uniform(0, 1e-3, n_pairs).astype(np.float32),
+        prompt_cost=rng.uniform(0, 5e-4, n_pairs).astype(np.float32),
+        hit_frac=rng.uniform(0, 1, n_pairs).astype(np.float32),
+        queue_len=rng.integers(0, 10, n_nodes))
+    want = decide_pair_affinity_py(genome, arrays=arrays, **kw)
+    got = int(decide_pair_affinity_jnp(
+        jnp.asarray(genome), arrays=arrays,
+        **{k: (jnp.asarray(v) if not np.isscalar(v) else jnp.float32(v))
+           for k, v in kw.items()}))
+    assert want == got
+
+
+def test_affinity_hit_discount_changes_decision(cluster):
+    """A full cache hit on an edge node must beat an empty cloud pair when
+    the undiscounted prefill would miss the deadline."""
+    arrays = cluster.to_arrays()
+    n_pairs = arrays.n_pairs
+    pair_is_edge = np.asarray(arrays.pair_is_edge)
+    prefill = np.where(pair_is_edge, 2.0, 0.05).astype(np.float32)
+    cost = np.where(pair_is_edge, 1e-5, 1e-3).astype(np.float32)
+    hit = np.where(pair_is_edge, 0.9, 0.0).astype(np.float32)
+    kw = dict(ttft_deadline=0.5, tpot_deadline=1.0,
+              up=np.zeros(n_pairs, np.float32), prefill=prefill,
+              tpot=np.full(n_pairs, 0.05, np.float32), cost=cost,
+              prompt_cost=(cost * 0.5).astype(np.float32),
+              queue_len=np.zeros(arrays.n_nodes, np.int64), arrays=arrays)
+    blind = decide_pair_affinity_py(
+        AFFINITY_DEFAULTS, hit_frac=np.zeros(n_pairs, np.float32), **kw)
+    aware = decide_pair_affinity_py(AFFINITY_DEFAULTS, hit_frac=hit, **kw)
+    assert not pair_is_edge[blind]     # uncached edge prefill infeasible
+    assert pair_is_edge[aware]         # cached edge is feasible and cheaper
+
+
+# ---------------------------------------------------------------------------
+# monitor prefix state
+# ---------------------------------------------------------------------------
+def test_monitor_prefix_state_and_hit_fractions():
+    mon = ClusterMonitor(3)
+    mon.record_prefix(1, ("sess", 7), 32)
+    mon.record_prefix(1, ("sess", 7), 16)     # monotone max, never shrinks
+    mon.record_prefix(2, ("sys", 0), 48)
+    assert mon.cached_tokens(1, ("sess", 7)) == 32
+    # session hit on node 1; system-prompt hit on node 2; nothing on node 0
+    hf = mon.hit_fractions(session=7, sys=0, prompt_tokens=64,
+                           sys_tokens=50, block=16)
+    assert hf[0] == 0.0
+    assert hf[1] == pytest.approx(32 / 64)
+    assert hf[2] == pytest.approx(48 / 64)
+    mon.drop_prefixes(1)
+    assert mon.hit_fractions(7, 0, 64, 50, block=16)[1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# JAX evaluator vs DES oracles with the prefix-cache model
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["affinity", "slo", "direct"])
+def test_prefix_cache_jax_des_equivalence(session_trace, cluster, policy):
+    ev = TraceEvaluator(session_trace, cluster,
+                        EvalConfig(mode="open", prefix_cache=True))
+    if policy == "affinity":
+        res = ev.run_affinity_policy(AFFINITY_DEFAULTS)
+    elif policy == "slo":
+        res = ev.run_slo_policy(SLO_DEFAULTS)
+    else:
+        rng = np.random.default_rng(0)
+        res = ev.run_assignment(
+            jnp.asarray(rng.integers(0, ev.arrays.n_pairs,
+                                     session_trace.n_requests)))
+    assign = np.asarray(res.assign)
+    sim = ClusterSimulator(session_trace, cluster, prefix_cache=True)
+    for sr in (sim.run(assign), sim.run_event_heap(assign)):
+        np.testing.assert_array_equal(assign, sr.assign)
+        for f in ("q", "cost", "rt", "ttft", "hit"):
+            np.testing.assert_allclose(np.asarray(getattr(res, f)),
+                                       getattr(sr, f), rtol=1e-4, atol=1e-5,
+                                       err_msg=f)
+    assert float(np.asarray(res.hit).mean()) > 0.0
+
+
+def test_prefix_cache_discounts_vs_cache_blind_run(session_trace, cluster):
+    """Same assignment with and without the cache model: hits can only
+    shorten prefill (ttft) and reduce cost, never the reverse."""
+    ev_on = TraceEvaluator(session_trace, cluster,
+                           EvalConfig(mode="open", prefix_cache=True))
+    ev_off = TraceEvaluator(session_trace, cluster, EvalConfig(mode="open"))
+    assign = jnp.asarray(
+        np.asarray(ev_on.run_affinity_policy(AFFINITY_DEFAULTS).assign))
+    on = ev_on.run_assignment(assign)
+    off = ev_off.run_assignment(assign)
+    assert float(jnp.mean(on.hit)) > 0.1
+    assert np.all(np.asarray(on.cost) <= np.asarray(off.cost) + 1e-9)
+    assert np.all(np.asarray(on.ttft) <= np.asarray(off.ttft) + 1e-6)
+    assert float(jnp.mean(on.rt)) <= float(jnp.mean(off.rt)) + 1e-6
+
+
+def test_prefix_cache_requires_open_loop():
+    with pytest.raises(AssertionError):
+        EvalConfig(mode="queued", prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# router affinity mode
+# ---------------------------------------------------------------------------
+def test_router_affinity_mode_sticks_to_cached_node(session_trace, cluster):
+    router = RequestRouter(cluster, np.zeros(6), mode="affinity")
+    # serve each session's first turn, recording prefix residency like the
+    # cluster scheduler does on dispatch
+    placed = {}
+    for req in session_trace.requests:
+        d = router.route(req)
+        blk = router.cache_block
+        router.monitor.record_prefix(d.node, ("sess", req.session_id),
+                                     req.prompt_tokens // blk * blk)
+        if req.sys_id >= 0:
+            router.monitor.record_prefix(d.node, ("sys", req.sys_id),
+                                         req.sys_tokens // blk * blk)
+        if req.turn > 0 and req.session_id in placed:
+            # later turns overwhelmingly land where the session's KV lives
+            placed.setdefault("later", []).append(
+                d.node == placed[req.session_id])
+        placed[req.session_id] = d.node
+    later = placed.get("later", [])
+    assert later and np.mean(later) >= 0.7, np.mean(later)
+
+
+def test_router_affinity_reoptimize_installs_genome(session_trace, cluster):
+    """The rolling-horizon re-fit must search the [γ, κ, ρ] affinity genome
+    (with the cache modeled, since the recorded window carries sessions +
+    arrivals) and install the selected parameters."""
+    router = RequestRouter(cluster, np.zeros(6), mode="affinity")
+    ev = TraceEvaluator(session_trace, cluster,
+                        EvalConfig(mode="open", prefix_cache=True))
+    res = ev.run_affinity_policy(AFFINITY_DEFAULTS)
+    q = np.asarray(res.q); c = np.asarray(res.cost); rt = np.asarray(res.rt)
+    for i, req in enumerate(session_trace.requests):
+        d = router.route(req)
+        router.record(req, d, quality=float(q[i]), cost=float(c[i]),
+                      rt=float(rt[i]),
+                      now=float(session_trace.arrival_time[i]),
+                      ttft_deadline=float(session_trace.ttft_deadline[i]),
+                      tpot_deadline=float(session_trace.tpot_deadline[i]))
+    params = router.maybe_reoptimize(force=True, window=64, generations=3,
+                                     pop_size=8, seed=0)
+    assert params is not None and params.shape == (3,)
+    assert np.array_equal(params, router.affinity_params)
