@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 import csv
+import json
 import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
+REPO = Path(__file__).resolve().parent.parent
 
 
 def write_csv(name: str, header, rows):
@@ -18,11 +20,45 @@ def write_csv(name: str, header, rows):
     return path
 
 
+def write_bench_json(name: str, payload: dict):
+    """Write a BENCH_<name>.json perf record at the repo root (the perf
+    trajectory CI uploads as an artifact)."""
+    path = REPO / f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _block(out):
+    """Wait for async-dispatched JAX work before reading the clock; no-op
+    for plain Python outputs."""
+    try:
+        import jax
+        return jax.block_until_ready(out)
+    except Exception:
+        return out
+
+
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
-    for _ in range(warmup):
-        out = fn(*args)
+    """Mean **warm** seconds per call (post-compile), with
+    ``jax.block_until_ready`` on the outputs — without it JAX's async
+    dispatch returns before the work ran and the numbers under-measure.
+    Returns (last output, warm seconds)."""
+    out, _, warm = timed_full(fn, *args, warmup=warmup, iters=iters)
+    return out, warm
+
+
+def timed_full(fn, *args, warmup: int = 1, iters: int = 3):
+    """Like :func:`timed` but reports cold (first call — includes trace +
+    XLA compile) and warm time separately: (output, cold_s, warm_s)."""
+    t0 = time.perf_counter()
+    out = _block(fn(*args))
+    cold = time.perf_counter() - t0
+    for _ in range(max(warmup - 1, 0)):
+        out = _block(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    dt = (time.perf_counter() - t0) / iters
-    return out, dt
+        out = _block(fn(*args))
+    warm = (time.perf_counter() - t0) / iters
+    return out, cold, warm

@@ -110,7 +110,9 @@ def run(seed: int = 0):
                          f"{s['cache_hit_frac']:.4f}",
                          f"{composite[name]:.4f}"])
         verdicts[mean_turns] = (summaries, composite, tuned)
-    write_csv("prefix_reuse.csv",
+    # smoke runs write a separate file so CI cannot clobber the committed
+    # full-sweep results
+    write_csv("prefix_reuse_smoke.csv" if SMOKE else "prefix_reuse.csv",
               ["mean_turns", "strategy", "avg_quality", "avg_cost",
                "avg_rt_s", "avg_ttft_s", "slo_attainment", "cache_hit_frac",
                "latency_cost_composite"], rows)

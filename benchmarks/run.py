@@ -10,9 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from . import (fig2_quality, fig3_tradeoff, fig4_concurrency, nsga2_perf,
-                   online_drift, prefix_reuse, roofline, slo_attainment,
-                   table2_routing)
+    from . import (fig2_quality, fig3_tradeoff, fig4_concurrency, hotpath,
+                   nsga2_perf, online_drift, prefix_reuse, roofline,
+                   slo_attainment, table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
@@ -21,6 +21,7 @@ def main() -> None:
                ("online_drift", online_drift),
                ("prefix_reuse", prefix_reuse),
                ("nsga2_perf", nsga2_perf),
+               ("hotpath", hotpath),
                ("roofline", roofline)]
     failures = 0
     for name, mod in modules:

@@ -37,6 +37,23 @@ from .pareto import crowding_distance, non_dominated_sort
 PENALTY = 1e6
 
 
+class _StaticConfig(NamedTuple):
+    """Hashable static slice of :class:`NSGA2Config` — the jit cache key of
+    the module-level generation step. Two ``NSGA2`` instances with equal
+    static configs (and the same fitness kernel) share one compiled
+    executable; the continuous bounds stay *dynamic* arguments so re-fits
+    with different bounds of the same shape also hit the cache."""
+
+    pop_size: int
+    crossover_prob: float
+    mutation_prob: float
+    eta_crossover: float
+    eta_mutation: float
+    genome: str
+    n_choices: int
+    n_genes: int
+
+
 @dataclasses.dataclass(frozen=True)
 class NSGA2Config:
     """Hyper-parameters (paper §V-A: P=100, T=100, pc=0.8, pm=0.1)."""
@@ -69,6 +86,23 @@ class NSGA2Config:
         assert self.genome_length > 0, \
             "discrete genome requires genome_length (or a custom init_fn)"
         return self.genome_length
+
+    @property
+    def static_key(self) -> _StaticConfig:
+        """Static (hashable) part of the config; D = -1 when only a custom
+        ``init_fn`` can determine the genome length."""
+        if self.genome == "continuous" and self.lo is not None:
+            D = int(self.lo.shape[0])
+        elif self.genome == "discrete" and self.genome_length > 0:
+            D = self.genome_length
+        else:
+            D = -1
+        return _StaticConfig(
+            pop_size=self.pop_size, crossover_prob=self.crossover_prob,
+            mutation_prob=self.mutation_prob,
+            eta_crossover=self.eta_crossover,
+            eta_mutation=self.eta_mutation, genome=self.genome,
+            n_choices=self.n_choices, n_genes=D)
 
 
 class NSGA2State(NamedTuple):
@@ -203,14 +237,20 @@ def binary_tournament(key: jax.Array, rank: jax.Array, crowd: jax.Array,
 
 def survival_select(F: jax.Array, P: int,
                     dominance_fn: Optional[Callable[[jax.Array], jax.Array]]
-                    = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                    = None, top: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Elitist (μ+λ) truncation: top-P of combined population by
     (rank asc, crowding desc). Returns (indices, rank_sel, crowd_sel).
 
     ``dominance_fn`` optionally computes the (2P, 2P) dominance matrix fed to
-    the sort (e.g. the Pallas kernel); default is the jnp reference."""
+    the sort (e.g. the Pallas kernel); default is the jnp reference.
+    ``top`` forwards the early-exit quota to ``non_dominated_sort`` —
+    survival only needs ranks up to the front containing the P-th survivor,
+    so the generation step passes ``top=P`` (ranks of selected individuals
+    are identical to the full sort; unpeeled tails share a sentinel rank and
+    are never selected)."""
     dom = dominance_fn(F) if dominance_fn is not None else None
-    rank = non_dominated_sort(F, dom)
+    rank = non_dominated_sort(F, dom, top=top)
     crowd = crowding_distance(F, rank)
     # lexsort: primary rank asc, secondary crowd desc. Replace inf for sort
     # stability under -crowd (−inf sorts first which is what we want).
@@ -218,6 +258,143 @@ def survival_select(F: jax.Array, P: int,
     order = jnp.lexsort((neg_crowd, rank))
     sel = order[:P]
     return sel, rank[sel], crowd[sel]
+
+
+# ---------------------------------------------------------------------------
+# Module-level jitted generation step / full run
+#
+# Historically every ``NSGA2`` instance re-jitted its own generation step
+# (``jax.jit(self._step_impl)``), so the rolling-horizon router paid a full
+# retrace per re-fit even with identical hyper-parameters and table shapes.
+# The step now lives here, keyed on (static config, fitness kernel identity,
+# dominance backend): any two instances with equal statics share one
+# compiled executable, and per-evaluator data (tables, bounds, archives)
+# flows through dynamic arguments. ``core.fitness.make_fitness`` returns
+# fitness callables carrying a memoized ``.kernel``/``.data`` split exactly
+# so this cache hits across evaluators.
+# ---------------------------------------------------------------------------
+
+
+def _call_fitness(fitness_fn, genomes, key, data):
+    """Invoke a fitness function in either calling convention: legacy
+    ``(genomes, key)`` closures, or cache-friendly ``(genomes, key, data)``
+    kernels whose per-evaluator state arrives as a dynamic pytree."""
+    if data is None:
+        return fitness_fn(genomes, key)
+    return fitness_fn(genomes, key, data)
+
+
+def _dominance_matrix_for(F, dominance: str):
+    """Resolve the survival dominance matrix backend ("jnp" -> None, i.e.
+    the reference inside non_dominated_sort; "pallas" -> the kernel,
+    interpret-mode off TPU)."""
+    if dominance == "jnp":
+        return None
+    from ..kernels.dominance import dominance_matrix_pallas
+    interpret = jax.default_backend() != "tpu"
+    return dominance_matrix_pallas(F, interpret=interpret).astype(bool)
+
+
+def _init_core(key, lo, hi, archive, fitness_data, scfg: _StaticConfig,
+               fitness_fn, dominance: str, init_fn) -> NSGA2State:
+    k_pop, k_fit, k_next = jax.random.split(key, 3)
+    if init_fn is not None:
+        genomes = init_fn(k_pop)
+    elif scfg.genome == "continuous":
+        assert scfg.n_genes > 0, "continuous genome requires bounds"
+        u = jax.random.uniform(k_pop, (scfg.pop_size, scfg.n_genes))
+        genomes = lo + u * (hi - lo)
+    else:
+        if scfg.n_choices <= 0:
+            raise ValueError("discrete genome requires init_fn or n_choices>0")
+        assert scfg.n_genes > 0, \
+            "discrete genome requires genome_length (or a custom init_fn)"
+        genomes = jax.random.randint(
+            k_pop, (scfg.pop_size, scfg.n_genes), 0, scfg.n_choices,
+            dtype=jnp.int32)
+    if archive is not None:
+        # warm start (same semantics as archive_init, but the archive is a
+        # *dynamic* argument so repeated warm-started re-fits share a trace)
+        n_seed = min(archive.shape[0], scfg.pop_size)
+        if scfg.genome == "continuous":
+            seeds = jnp.clip(archive[:n_seed].astype(genomes.dtype), lo, hi)
+        else:
+            seeds = archive[:n_seed].astype(jnp.int32)
+        genomes = genomes.at[:n_seed].set(seeds)
+    F_raw, violation = _call_fitness(fitness_fn, genomes, k_fit, fitness_data)
+    F = _penalize(F_raw, violation)
+    rank = non_dominated_sort(F, _dominance_matrix_for(F, dominance))
+    crowd = crowding_distance(F, rank)
+    return NSGA2State(genomes, F, F_raw, violation, rank, crowd, k_next,
+                      jnp.int32(0))
+
+
+def _step_core(state: NSGA2State, lo, hi, fitness_data,
+               scfg: _StaticConfig, fitness_fn, dominance: str) -> NSGA2State:
+    P = scfg.pop_size
+    key, k_sel, k_cx, k_mut, k_fit = jax.random.split(state.key, 5)
+
+    parents = binary_tournament(k_sel, state.rank, state.crowd, P)
+    pg = state.genomes[parents]
+    p1, p2 = pg[0::2], pg[1::2]
+
+    if scfg.genome == "continuous":
+        c1, c2 = sbx_crossover(k_cx, p1, p2, lo, hi,
+                               scfg.crossover_prob, scfg.eta_crossover)
+        offspring = jnp.concatenate([c1, c2], axis=0)
+        offspring = polynomial_mutation(k_mut, offspring, lo, hi,
+                                        scfg.mutation_prob,
+                                        scfg.eta_mutation)
+    else:
+        c1, c2 = uniform_swap_crossover(k_cx, p1, p2, scfg.crossover_prob)
+        offspring = jnp.concatenate([c1, c2], axis=0)
+        offspring = reassignment_mutation(k_mut, offspring,
+                                          scfg.mutation_prob, scfg.n_choices)
+
+    F_off_raw, viol_off = _call_fitness(fitness_fn, offspring, k_fit,
+                                        fitness_data)
+    F_off = _penalize(F_off_raw, viol_off)
+
+    # (μ+λ) combine + survival (ranks beyond the top-P cutoff early-exit)
+    genomes_all = jnp.concatenate([state.genomes, offspring], axis=0)
+    F_all = jnp.concatenate([state.F, F_off], axis=0)
+    F_raw_all = jnp.concatenate([state.F_raw, F_off_raw], axis=0)
+    viol_all = jnp.concatenate([state.violation, viol_off], axis=0)
+    dom_fn = (None if dominance == "jnp"
+              else lambda F: _dominance_matrix_for(F, dominance))
+    sel, rank_sel, crowd_sel = survival_select(F_all, P, dom_fn, top=P)
+
+    return NSGA2State(
+        genomes=genomes_all[sel], F=F_all[sel], F_raw=F_raw_all[sel],
+        violation=viol_all[sel], rank=rank_sel, crowd=crowd_sel, key=key,
+        generation=state.generation + 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scfg", "fitness_fn", "dominance"))
+def _nsga2_step(state: NSGA2State, lo, hi, fitness_data, *,
+                scfg: _StaticConfig, fitness_fn, dominance: str
+                ) -> NSGA2State:
+    return _step_core(state, lo, hi, fitness_data, scfg, fitness_fn,
+                      dominance)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scfg", "fitness_fn", "dominance",
+                                    "n_generations", "init_fn"))
+def _nsga2_run(key, lo, hi, archive, fitness_data, *, scfg: _StaticConfig,
+               fitness_fn, dominance: str, n_generations: int,
+               init_fn=None) -> NSGA2State:
+    """Entire optimization (init + T generations) as one compiled program."""
+    state = _init_core(key, lo, hi, archive, fitness_data, scfg, fitness_fn,
+                       dominance, init_fn)
+
+    def body(s, _):
+        return _step_core(s, lo, hi, fitness_data, scfg, fitness_fn,
+                          dominance), None
+
+    state, _ = jax.lax.scan(body, state, None, length=n_generations)
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +413,10 @@ class NSGA2:
     init_fn : optional custom population initializer (key) -> (P, D) genomes.
         Defaults to uniform in bounds / uniform categorical. The paper's
         heuristic-biased init for direct genomes lives in core.fitness;
-        warm-starting from a previous run's front uses :func:`archive_init`.
+        warm-starting from a previous run's front prefers
+        ``evolve_scan(..., archive=)`` (a dynamic argument, so repeated
+        warm-started re-fits share one compiled executable) over the legacy
+        :func:`archive_init` closure.
     use_pallas_dominance : compute the survival-selection dominance matrix
         with the Pallas kernel (``repro.kernels.dominance``) — native on TPU,
         interpreter mode elsewhere (CPU tests); semantics are identical to
@@ -250,76 +430,43 @@ class NSGA2:
         self.config = config
         self.init_fn = init_fn
         self.use_pallas_dominance = use_pallas_dominance
-        self._dominance_fn = None
-        if use_pallas_dominance:
-            from ..kernels.dominance import dominance_matrix_pallas
-            interpret = jax.default_backend() != "tpu"
-            self._dominance_fn = lambda F: dominance_matrix_pallas(
-                F, interpret=interpret).astype(bool)
-        self._step = jax.jit(self._step_impl)
+        self._dominance = "pallas" if use_pallas_dominance else "jnp"
+        # cache-friendly split: fitness callables built by
+        # core.fitness.make_fitness carry a memoized module-level `.kernel`
+        # plus a `.data` pytree — the kernel identity is the jit cache key,
+        # the data (tables, arrays) stays dynamic, so two optimizers over
+        # two same-shaped evaluators share one compiled step. Legacy
+        # closures run as-is (static identity -> one trace per closure);
+        # the module-level jit cache then retains the closure and whatever
+        # it captures for the process lifetime, so long-lived callers
+        # creating many NSGA2 instances should prefer make_fitness kernels
+        # or call jax.clear_caches() periodically.
+        kernel = getattr(fitness_fn, "kernel", None)
+        if kernel is not None:
+            self._fitness_fn = kernel
+            self._fitness_data = fitness_fn.data
+        else:
+            self._fitness_fn = fitness_fn
+            self._fitness_data = None
+        if config.genome == "continuous" and config.lo is not None:
+            self._lo = jnp.asarray(config.lo)
+            self._hi = jnp.asarray(config.hi)
+        else:
+            self._lo = jnp.zeros((0,), jnp.float32)
+            self._hi = jnp.zeros((0,), jnp.float32)
 
     # -- init ---------------------------------------------------------------
     def init(self, key: jax.Array) -> NSGA2State:
-        cfg = self.config
-        k_pop, k_fit, k_next = jax.random.split(key, 3)
-        if self.init_fn is not None:
-            genomes = self.init_fn(k_pop)
-        elif cfg.genome == "continuous":
-            D = cfg.lo.shape[0]
-            u = jax.random.uniform(k_pop, (cfg.pop_size, D))
-            genomes = cfg.lo + u * (cfg.hi - cfg.lo)
-        else:
-            if cfg.n_choices <= 0:
-                raise ValueError("discrete genome requires init_fn or n_choices>0")
-            genomes = jax.random.randint(
-                k_pop, (cfg.pop_size, cfg.n_genes), 0, cfg.n_choices,
-                dtype=jnp.int32)
-        F_raw, violation = self.fitness_fn(genomes, k_fit)
-        F = _penalize(F_raw, violation)
-        dom = (self._dominance_fn(F) if self._dominance_fn is not None
-               else None)
-        rank = non_dominated_sort(F, dom)
-        crowd = crowding_distance(F, rank)
-        return NSGA2State(genomes, F, F_raw, violation, rank, crowd, k_next,
-                          jnp.int32(0))
+        return _init_core(key, self._lo, self._hi, None, self._fitness_data,
+                          self.config.static_key, self._fitness_fn,
+                          self._dominance, self.init_fn)
 
     # -- one generation -------------------------------------------------------
-    def _step_impl(self, state: NSGA2State) -> NSGA2State:
-        cfg = self.config
-        P = cfg.pop_size
-        key, k_sel, k_cx, k_mut, k_fit = jax.random.split(state.key, 5)
-
-        parents = binary_tournament(k_sel, state.rank, state.crowd, P)
-        pg = state.genomes[parents]
-        p1, p2 = pg[0::2], pg[1::2]
-
-        if cfg.genome == "continuous":
-            c1, c2 = sbx_crossover(k_cx, p1, p2, cfg.lo, cfg.hi,
-                                   cfg.crossover_prob, cfg.eta_crossover)
-            offspring = jnp.concatenate([c1, c2], axis=0)
-            offspring = polynomial_mutation(k_mut, offspring, cfg.lo, cfg.hi,
-                                            cfg.mutation_prob, cfg.eta_mutation)
-        else:
-            c1, c2 = uniform_swap_crossover(k_cx, p1, p2, cfg.crossover_prob)
-            offspring = jnp.concatenate([c1, c2], axis=0)
-            offspring = reassignment_mutation(k_mut, offspring,
-                                              cfg.mutation_prob, cfg.n_choices)
-
-        F_off_raw, viol_off = self.fitness_fn(offspring, k_fit)
-        F_off = _penalize(F_off_raw, viol_off)
-
-        # (μ+λ) combine + survival
-        genomes_all = jnp.concatenate([state.genomes, offspring], axis=0)
-        F_all = jnp.concatenate([state.F, F_off], axis=0)
-        F_raw_all = jnp.concatenate([state.F_raw, F_off_raw], axis=0)
-        viol_all = jnp.concatenate([state.violation, viol_off], axis=0)
-        sel, rank_sel, crowd_sel = survival_select(F_all, P,
-                                                   self._dominance_fn)
-
-        return NSGA2State(
-            genomes=genomes_all[sel], F=F_all[sel], F_raw=F_raw_all[sel],
-            violation=viol_all[sel], rank=rank_sel, crowd=crowd_sel, key=key,
-            generation=state.generation + 1)
+    def _step(self, state: NSGA2State) -> NSGA2State:
+        return _nsga2_step(state, self._lo, self._hi, self._fitness_data,
+                           scfg=self.config.static_key,
+                           fitness_fn=self._fitness_fn,
+                           dominance=self._dominance)
 
     # -- drivers --------------------------------------------------------------
     def evolve(self, key: jax.Array, n_generations: Optional[int] = None,
@@ -334,16 +481,27 @@ class NSGA2:
                 callback(state)
         return state
 
-    @functools.partial(jax.jit, static_argnums=(0, 2))
-    def evolve_scan(self, key: jax.Array, n_generations: int) -> NSGA2State:
-        """Entire run as one lax.scan — used by the perf benchmark."""
-        state = self.init(key)
+    def evolve_scan(self, key: jax.Array,
+                    n_generations: Optional[int] = None,
+                    archive: Optional[jax.Array] = None) -> NSGA2State:
+        """Entire run as one lax.scan in one compiled program.
 
-        def body(s, _):
-            return self._step_impl(s), None
-
-        state, _ = jax.lax.scan(body, state, None, length=n_generations)
-        return state
+        ``archive`` optionally warm-starts the population from a previous
+        run's survival-ordered genomes (same semantics as
+        :func:`archive_init`, but passed as a *dynamic* argument so repeated
+        warm-started re-fits reuse the compiled executable instead of
+        retracing per closure identity)."""
+        T = (n_generations if n_generations is not None
+             else self.config.n_generations)
+        if (self.init_fn is None and self.config.genome == "discrete"
+                and self.config.n_choices <= 0):
+            raise ValueError("discrete genome requires init_fn or n_choices>0")
+        arch = None if archive is None else jnp.asarray(archive)
+        return _nsga2_run(key, self._lo, self._hi, arch, self._fitness_data,
+                          scfg=self.config.static_key,
+                          fitness_fn=self._fitness_fn,
+                          dominance=self._dominance, n_generations=T,
+                          init_fn=self.init_fn)
 
     # -- results --------------------------------------------------------------
     def pareto_front(self, state: NSGA2State) -> Tuple[jax.Array, jax.Array]:

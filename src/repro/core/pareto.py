@@ -42,7 +42,8 @@ def pareto_mask(F: jax.Array) -> jax.Array:
     return ~jnp.any(dom, axis=0)
 
 
-def non_dominated_sort(F: jax.Array, dom: jax.Array | None = None) -> jax.Array:
+def non_dominated_sort(F: jax.Array, dom: jax.Array | None = None,
+                       top: int | None = None) -> jax.Array:
     """Return (P,) int32 front ranks (0 = best / non-dominated front).
 
     Iterative front peeling: repeatedly take the set of individuals with no
@@ -53,14 +54,26 @@ def non_dominated_sort(F: jax.Array, dom: jax.Array | None = None) -> jax.Array:
     ``dom`` optionally supplies a precomputed (P, P) bool dominance matrix —
     the Pallas kernel in :mod:`repro.kernels.dominance` produces one without
     the O(P²·M) broadcast materializing in HBM on TPU.
+
+    ``top`` enables the survival-selection early exit: peeling stops once at
+    least ``top`` individuals are ranked (i.e. after the front containing the
+    ``top``-th survivor completes). Every individual beyond the cutoff gets
+    the sentinel rank ``P - 1`` — larger than any peeled front's rank, so
+    (rank asc, crowd desc) truncation to the top ``top`` never selects one.
+    Ranks ≤ the cutoff front are identical to the full sort; the while_loop
+    simply runs fewer trips (elitist μ+λ survival only needs ranks up to the
+    front holding the P-th survivor, typically a small fraction of the 2P
+    combined population).
     """
     P = F.shape[0]
     if dom is None:
         dom = dominance_matrix(F)  # dom[i, j]: i dominates j
+    quota = P if top is None else min(int(top), P)
 
     def cond(state):
         rank, _, k = state
-        return jnp.any(rank < 0) & (k < P)
+        n_ranked = jnp.sum(rank >= 0)
+        return jnp.any(rank < 0) & (k < P) & (n_ranked < quota)
 
     def body(state):
         rank, dom_cnt, k = state
@@ -78,7 +91,8 @@ def non_dominated_sort(F: jax.Array, dom: jax.Array | None = None) -> jax.Array:
     rank0 = jnp.full((P,), -1, dtype=jnp.int32)
     cnt0 = jnp.sum(dom, axis=0).astype(jnp.int32)
     rank, _, _ = jax.lax.while_loop(cond, body, (rank0, cnt0, jnp.int32(0)))
-    # Safety: anything still unranked (cannot happen mathematically) -> last.
+    # Beyond-cutoff individuals (and, as a safety net, anything unranked,
+    # which cannot happen mathematically with top=None) -> last rank.
     return jnp.where(rank < 0, P - 1, rank).astype(jnp.int32)
 
 

@@ -19,8 +19,13 @@ fault-aware:
   ``maybe_reoptimize`` rebuilds a trace from the recorded window (open-loop
   when arrival timestamps were recorded, with the recorded SLO deadlines when
   present), re-runs a small NSGA-II over it **warm-started** from the
-  previous run's population archive (``nsga2.archive_init``), and installs
-  the re-selected policy parameters.
+  previous run's population archive (``evolve_scan(..., archive=)``), and
+  installs the re-selected policy parameters. Re-fits are **compile-once**:
+  the window trace is padded to a power-of-two bucket
+  (``TraceEvaluator(bucket="pow2")``) and the optimizer's generation step is
+  a module-level jitted function keyed on static config, so every re-fit
+  after the first reuses cached executables (ms-scale instead of an XLA
+  retrace per window).
 
 Three decision modes (``mode=``):
 
@@ -258,13 +263,13 @@ class RequestRouter:
         with ``concurrency`` clients otherwise; with the recorded deadlines
         and the 4-objective QoE fitness when every observation carries a
         contract). The search is warm-started from the previous re-opt's
-        survival-ordered population via ``nsga2.archive_init``, then the
+        survival-ordered population (``evolve_scan(..., archive=)``), then the
         Eq. (1) weighted-sum pick (uniform ``weights`` by default) replaces
         the live policy parameters. Returns them, or None if skipped.
         """
         from ..workload.trace import trace_from_requests
         from .fitness import EvalConfig, TraceEvaluator
-        from .nsga2 import NSGA2, NSGA2Config, archive_init
+        from .nsga2 import NSGA2, NSGA2Config
         from .policy import (AFFINITY_BOUNDS_HI, AFFINITY_BOUNDS_LO,
                              BOUNDS_HI, BOUNDS_LO, SLO_BOUNDS_HI,
                              SLO_BOUNDS_LO)
@@ -312,7 +317,12 @@ class RequestRouter:
             # re-fit against the cache dynamics the window actually had
             prefix_cache=(arrivals is not None and trace.has_sessions),
             cache_block=self.cache_block)
-        evaluator = TraceEvaluator(trace, self.cluster, cfg_eval)
+        # bucketed (compile-once) evaluation: windows of different lengths
+        # pad to the same power-of-two bucket, so every re-fit after the
+        # first reuses the compiled trace-eval + NSGA-II executables instead
+        # of paying an XLA retrace per drifting window
+        evaluator = TraceEvaluator(trace, self.cluster, cfg_eval,
+                                   bucket="pow2")
 
         if self.mode == "slo":
             genome_kind, lo, hi = "slo", SLO_BOUNDS_LO, SLO_BOUNDS_HI
@@ -324,11 +334,13 @@ class RequestRouter:
         cfg = NSGA2Config(pop_size=pop_size, n_generations=generations,
                           lo=jnp.asarray(lo), hi=jnp.asarray(hi))
         objectives = "qoe" if trace.has_slos else "paper"
-        init_fn = (archive_init(self._archive, cfg)
-                   if self._archive is not None else None)
         opt = NSGA2(evaluator.make_fitness(genome_kind, objectives=objectives),
-                    cfg, init_fn=init_fn)
-        state = opt.evolve_scan(jax.random.key(seed), generations)
+                    cfg)
+        # warm start from the previous re-fit's survival-ordered population;
+        # the archive is a dynamic argument (same shape every re-fit), so
+        # warm-started runs share the compiled executable too
+        state = opt.evolve_scan(jax.random.key(seed), generations,
+                                archive=self._archive)
         # archive the survival-ordered population for the next warm start
         self._archive = np.asarray(state.genomes)
 

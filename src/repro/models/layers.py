@@ -139,11 +139,16 @@ _CHUNKED_THRESHOLD = 4096
 _Q_CHUNK = 512
 
 
-def _xla_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
+def _xla_attention(q, k, v, causal: bool, q_offset: int = 0,
+                   mask=None) -> jax.Array:
     """(B, S, H, D) attention via XLA einsums; q-chunked beyond threshold so
     the (B, H, Sq, Sk) score tensor never exceeds ~chunk×S per head.
     ``q_offset`` is the global position of query row 0 (prefix-extension
-    prefill attends suffix queries over prefix+suffix keys)."""
+    prefill attends suffix queries over prefix+suffix keys).
+    ``mask`` optionally supplies an explicit (Sq, Sk) boolean admission mask
+    (True = attend) that *replaces* the index-based causal mask — used by the
+    bucketed prefix-extension path whose key layout carries padding (mask
+    values may be dynamic; shapes stay static)."""
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
     group = Hq // Hkv
@@ -157,10 +162,14 @@ def _xla_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
     def block(q_blk, q_off):
         # f32 accumulation without materializing f32 copies of K/V
         s = accum_dot("bhgqd,bhkd->bhgqk", q_blk, kh)
-        if causal:
+        if mask is not None:
+            m = jax.lax.dynamic_slice_in_dim(mask, q_off - q_offset,
+                                             q_blk.shape[3], axis=0)
+            s = jnp.where(m[None, None, None], s, -jnp.inf)
+        elif causal:
             qi = q_off + jnp.arange(q_blk.shape[3])
-            mask = qi[:, None] >= jnp.arange(Sk)[None, :]
-            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            cm = qi[:, None] >= jnp.arange(Sk)[None, :]
+            s = jnp.where(cm[None, None, None], s, -jnp.inf)
         w = jax.nn.softmax(s, axis=-1)
         return accum_dot("bhgqk,bhkd->bhgqd", w.astype(vh.dtype), vh)
 
@@ -218,7 +227,8 @@ def attention_prefill_cache(p, cfg: ModelConfig, x, positions
     return y, (k, v)
 
 
-def attention_prefill_extend(p, cfg: ModelConfig, x, positions, prefix_kv
+def attention_prefill_extend(p, cfg: ModelConfig, x, positions, prefix_kv,
+                             prefix_len=None
                              ) -> Tuple[jax.Array,
                                         Tuple[jax.Array, jax.Array]]:
     """Prefill the suffix of a prompt whose prefix K/V is already cached.
@@ -229,6 +239,15 @@ def attention_prefill_extend(p, cfg: ModelConfig, x, positions, prefix_kv
     prefix + suffix. Exactness: suffix rows see bitwise the same keys/values
     and causal mask a full-prompt ``attention_prefill_cache`` would compute,
     so prefix reuse cannot perturb the sampled tokens.
+
+    ``prefix_len`` switches to the **bucketed** layout (compile-once
+    admission): the prefix buffer is padded to its static S_pre and only the
+    first ``prefix_len`` (dynamic) rows are real; suffix rows may be padded
+    past their true length too. The explicit mask admits real-prefix columns
+    plus index-causal suffix columns (padded *query* rows produce garbage
+    that callers discard; padded *key* columns are only reachable from
+    padded query rows). Returns (y, (k, v)) with the **suffix-only** K/V —
+    the caller assembles the contiguous cache at the dynamic offset.
     """
     k_pre, v_pre = prefix_kv
     S_pre = k_pre.shape[1]
@@ -237,10 +256,18 @@ def attention_prefill_extend(p, cfg: ModelConfig, x, positions, prefix_kv
     k = rope(k, positions, cfg.rope_theta)
     k_full = jnp.concatenate([k_pre, k], axis=1)
     v_full = jnp.concatenate([v_pre, v], axis=1)
-    out = _xla_attention(q, k_full, v_full, causal=True, q_offset=S_pre)
     B, S = x.shape[:2]
+    if prefix_len is None:
+        out = _xla_attention(q, k_full, v_full, causal=True, q_offset=S_pre)
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.q_dim),
+                       p["wo"]["w"])
+        return y, (k_full, v_full)
+    col = jnp.arange(S_pre + S)[None, :]
+    row = jnp.arange(S)[:, None]
+    mask = jnp.where(col < S_pre, col < prefix_len, (col - S_pre) <= row)
+    out = _xla_attention(q, k_full, v_full, causal=False, mask=mask)
     y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.q_dim), p["wo"]["w"])
-    return y, (k_full, v_full)
+    return y, (k, v)
 
 
 def attention_decode(p, cfg: ModelConfig, x, cache, pos,

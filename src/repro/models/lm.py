@@ -313,10 +313,22 @@ def loss_fn(params, cfg: ModelConfig, batch, use_pallas="auto", remat=True,
 # ---------------------------------------------------------------------------
 
 def prefill(params, cfg: ModelConfig, batch, max_seq: Optional[int] = None,
-            use_pallas="auto", unroll=False):
+            use_pallas="auto", unroll=False,
+            length: Optional[jax.Array] = None):
     """Run the prompt, return (last-token logits, Cache). KV caches are
     allocated at ``max_seq`` (default: prompt length) and prefixed with the
-    prompt's K/V."""
+    prompt's K/V.
+
+    ``length`` enables **bucketed prefill**: ``tokens`` may be padded past
+    the real prompt (to a compile-size bucket) and ``length`` is the dynamic
+    true length — logits are read at row ``length - 1`` and the cache's
+    ``kv_len``/``pos`` marks only the real prompt as valid, so the padded
+    tail (whose K/V rows land beyond ``kv_len`` and get overwritten by
+    decode) cannot perturb outputs. Exact for pure-attention *dense*
+    patterns (causal masking keeps rows independent); recurrent mixers
+    integrate every token and MoE capacity lets padding displace real
+    tokens from expert slots, so callers must not pad those (the serving
+    engine gates on the block pattern)."""
     tokens = batch["tokens"]
     B, Sq = tokens.shape
     max_seq = max_seq or Sq
@@ -330,7 +342,14 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: Optional[int] = None,
     x = (L.apply_norm(cfg, params["final_norm"], x) if cfg.norm == "rmsnorm"
          else L.layer_norm(params["final_norm"], x, cfg.norm_eps))
     head = params.get("head", params["embed"])
-    logits = L.unembed(head, x[:, -1:])[:, 0]
+    if length is None:
+        last = x[:, -1:]
+        kv_fill, pos_fill = Sq, jnp.int32(Sq)
+    else:
+        length = jnp.asarray(length, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        kv_fill, pos_fill = length, length
+    logits = L.unembed(head, last)[:, 0]
 
     layer_caches, cross_caches = [], []
     for (mixer, _), c in zip(cfg.pattern, caches):
@@ -351,13 +370,15 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: Optional[int] = None,
             layer_caches.append(c)
             cross_caches.append(())
     cache = Cache(layer=tuple(layer_caches), cross=tuple(cross_caches),
-                  enc=None, kv_len=jnp.full((B,), Sq, jnp.int32),
-                  pos=jnp.int32(Sq))
+                  enc=None, kv_len=jnp.full((B,), kv_fill, jnp.int32),
+                  pos=jnp.asarray(pos_fill, jnp.int32))
     return logits, cache
 
 
 def prefill_extend(params, cfg: ModelConfig, batch, prefix,
-                   max_seq: Optional[int] = None):
+                   max_seq: Optional[int] = None,
+                   prefix_len: Optional[jax.Array] = None,
+                   length: Optional[jax.Array] = None):
     """Prefill only the uncached suffix of a prompt (paged prefix reuse).
 
     ``batch["tokens"]`` holds the (B, S_new) suffix; ``prefix`` is a tuple
@@ -367,6 +388,14 @@ def prefill_extend(params, cfg: ModelConfig, batch, prefix,
     ``prefill`` on the concatenated prompt would (suffix queries attend the
     cached keys under the same causal mask, so outputs are bit-identical).
 
+    **Bucketed mode** (compile-once admission): with ``prefix_len`` given,
+    the prefix buffer is padded to a fixed block budget (only the first
+    ``prefix_len`` dynamic rows are real) and the suffix tokens may be
+    padded to a length bucket with ``length`` as the true suffix length —
+    one executable then serves every (matched-blocks, suffix-length)
+    combination in the bucket. The returned cache stays contiguous: suffix
+    K/V is written at the dynamic ``prefix_len`` offset of a max_seq buffer.
+
     Pure-attention patterns only: recurrent mixers carry no position-sliceable
     prefix state (the serving engine gates paged mode on the same predicate).
     """
@@ -375,10 +404,20 @@ def prefill_extend(params, cfg: ModelConfig, batch, prefix,
     tokens = batch["tokens"]
     B, Sn = tokens.shape
     S_pre = prefix[0][0].shape[2]
-    total = S_pre + Sn
-    max_seq = max_seq or total
+    bucketed = prefix_len is not None
+    if bucketed:
+        prefix_len = jnp.asarray(prefix_len, jnp.int32)
+        suffix_len = (jnp.asarray(length, jnp.int32) if length is not None
+                      else jnp.int32(Sn))
+        total = prefix_len + suffix_len
+        assert max_seq is not None and Sn <= max_seq, \
+            "bucketed extend needs an explicit max_seq >= the padded suffix"
+        positions = prefix_len + jnp.arange(Sn)[None, :]
+    else:
+        total = S_pre + Sn
+        positions = S_pre + jnp.arange(Sn)[None, :]
+    max_seq = max_seq or (S_pre + Sn)
     x = L.embed(params["embed"], tokens)
-    positions = S_pre + jnp.arange(Sn)[None, :]
 
     def period_body(x, sl):
         stacked, pref = sl
@@ -388,8 +427,9 @@ def prefill_extend(params, cfg: ModelConfig, batch, prefix,
         for i, (mixer, ffn) in enumerate(cfg.pattern):
             p = stacked[i]
             h = L.apply_norm(cfg, p["norm1"], x)
-            y, kv = L.attention_prefill_extend(p["mixer"], cfg, h, positions,
-                                               pref[i])
+            y, kv = L.attention_prefill_extend(
+                p["mixer"], cfg, h, positions, pref[i],
+                prefix_len=prefix_len if bucketed else None)
             x = x + y
             new_kv.append(kv)
             if ffn == "dense":
@@ -407,14 +447,32 @@ def prefill_extend(params, cfg: ModelConfig, batch, prefix,
     x = (L.apply_norm(cfg, params["final_norm"], x) if cfg.norm == "rmsnorm"
          else L.layer_norm(params["final_norm"], x, cfg.norm_eps))
     head = params.get("head", params["embed"])
-    logits = L.unembed(head, x[:, -1:])[:, 0]
+    if bucketed:
+        last = jax.lax.dynamic_slice_in_dim(x, suffix_len - 1, 1, axis=1)
+    else:
+        last = x[:, -1:]
+    logits = L.unembed(head, last)[:, 0]
 
-    layer_caches = tuple((_pad_cache(k, max_seq), _pad_cache(v, max_seq))
-                         for k, v in caches)
+    if bucketed:
+        # contiguous cache: prefix buffer padded to max_seq, suffix K/V
+        # written at the dynamic prefix_len offset (real rows [0, total) —
+        # anything beyond is masked by kv_len and overwritten by decode)
+        def assemble(pre, suf):
+            base = _pad_cache(pre, max_seq)
+            return jax.lax.dynamic_update_slice(
+                base, suf.astype(base.dtype),
+                (0, 0, prefix_len, 0, 0))
+
+        layer_caches = tuple(
+            (assemble(pre_k, k), assemble(pre_v, v))
+            for (pre_k, pre_v), (k, v) in zip(prefix, caches))
+    else:
+        layer_caches = tuple((_pad_cache(k, max_seq), _pad_cache(v, max_seq))
+                             for k, v in caches)
     cache = Cache(layer=layer_caches,
                   cross=tuple(() for _ in cfg.pattern), enc=None,
                   kv_len=jnp.full((B,), total, jnp.int32),
-                  pos=jnp.int32(total))
+                  pos=jnp.asarray(total, jnp.int32))
     return logits, cache
 
 

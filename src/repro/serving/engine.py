@@ -35,6 +35,7 @@ prefix (multi-turn sessions, shared system prompts).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -45,6 +46,66 @@ import numpy as np
 from ..models import lm
 from ..models.config import ModelConfig
 from .kvcache import CacheStats, PagedKVStore
+
+# ---------------------------------------------------------------------------
+# Module-level jitted entry points, keyed on the (hashable) ModelConfig:
+# every engine with the same model shares one compiled executable per shape
+# bucket instead of re-jitting per instance, and admission pads prompts /
+# suffixes to `EngineConfig.prefill_bucket` multiples so distinct lengths
+# stop compiling distinct executables.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_one(params, cfg: ModelConfig, tok, cache):
+    return lm.decode_step(params, cfg, tok, cache)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_seq"))
+def _prefill_bucketed(params, cfg: ModelConfig, tokens, length, max_seq):
+    return lm.prefill(params, cfg, {"tokens": tokens}, max_seq=max_seq,
+                      length=length)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_seq"))
+def _prefill_extend_bucketed(params, cfg: ModelConfig, tokens, length,
+                             prefix, prefix_len, max_seq):
+    return lm.prefill_extend(params, cfg, {"tokens": tokens}, prefix,
+                             max_seq=max_seq, prefix_len=prefix_len,
+                             length=length)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "eos"))
+def _decode_chunk(params, cfg: ModelConfig, tok, cache, budget, alive,
+                  n: int, eos: int):
+    """``n`` fused decode iterations with device-side retirement.
+
+    Mirrors ``LLMEngine.step`` state evolution exactly: every iteration
+    decodes all slots, budgets decrement for live slots, a live slot retires
+    on exhausted budget or EOS (its ``kv_len`` zeroes and its next token
+    resets, exactly like ``_release_slot``), and already-dead slots keep
+    decoding garbage that nothing reads — so the chunk is bit-identical to
+    ``n`` single steps when no admission happens in between. Emits one
+    stacked (n, 3, B) int32 tensor (token, emitted-this-iter, retired-this-
+    iter) so the caller needs a single device->host transfer per chunk."""
+
+    def body(carry, _):
+        tok, cache, budget, alive = carry
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        emit = alive
+        budget = budget - alive.astype(jnp.int32)
+        retire = alive & ((budget <= 0) | (nxt == eos))
+        alive = alive & ~retire
+        cache = cache._replace(kv_len=jnp.where(retire, 0, cache.kv_len))
+        tok = jnp.where(retire, 0, nxt)[:, None]
+        out = jnp.stack([nxt, emit.astype(jnp.int32),
+                         retire.astype(jnp.int32)])
+        return (tok, cache, budget, alive), out
+
+    (tok, cache, budget, alive), outs = jax.lax.scan(
+        body, (tok, cache, budget, alive), None, length=n)
+    return tok, cache, outs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +142,21 @@ class LLMEngine:
         self.queue: deque = deque()
         self.results: Dict[int, dict] = {}
         self._next_token = jnp.zeros((B, 1), jnp.int32)
-        self._decode = jax.jit(
-            lambda params, tok, cache: lm.decode_step(params, cfg, tok, cache))
         self._steps = 0
+        self.host_syncs = 0   # device->host transfer count (decode path)
+        # bucketed prefill is exact only for pure-attention dense patterns:
+        # recurrent mixers integrate padding tokens into their state, and
+        # MoE capacity (GShard-style drop) lets padding tokens displace
+        # real tokens from expert slots
+        self._bucket_ok = (ecfg.prefill_bucket > 0 and
+                           all(m == "attn" and f != "moe"
+                               for m, f in cfg.pattern))
         self.kv: Optional[PagedKVStore] = (
             PagedKVStore(cfg, ecfg.cache_blocks, ecfg.block_size)
             if ecfg.prefix_cache else None)
+
+    def _decode(self, params, tok, cache):
+        return _decode_one(params, self.cfg, tok, cache)
 
     # -- public API -----------------------------------------------------------
     def submit(self, request_id: int, tokens: np.ndarray,
@@ -106,6 +176,7 @@ class LLMEngine:
         logits, self.cache = self._decode(self.params, self._next_token,
                                           self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.host_syncs += 1
         self._next_token = jnp.asarray(nxt[:, None])
         retired = []
         for i in active:
@@ -118,6 +189,59 @@ class LLMEngine:
                 retired.append(s.request_id)
                 self._release_slot(i)
         self._steps += 1
+        if retired:
+            self._admit()
+        return retired
+
+    def step_n(self, n: int) -> List[int]:
+        """Up to ``n`` fused decode iterations with ONE host transfer.
+
+        Host-sync-free stepping: the whole chunk (decode, budget/EOS
+        retirement masks, slot bookkeeping) runs device-side via
+        ``_decode_chunk``'s ``lax.scan``; the host sees a single stacked
+        (token, emitted, retired) tensor per chunk instead of one transfer
+        per decoded token. Bit-identical to ``n`` consecutive ``step()``
+        calls **when no admission is pending** — with queued work (which
+        ``step()`` would admit into freed slots mid-chunk) or ``n <= 1``
+        it falls back to a single ``step()``. The chunk is clipped to the
+        largest active budget so it never decodes past all retirements.
+        Returns all ids retired during the chunk."""
+        if n <= 1 or self.queue:
+            return self.step()
+        active = [i for i, s in enumerate(self.slots)
+                  if s.request_id is not None]
+        if not active:
+            self._admit()
+            return []
+        budgets = [s.budget if s.request_id is not None else 0
+                   for s in self.slots]
+        n_eff = min(n, max(budgets[i] for i in active))
+        alive = np.asarray([s.request_id is not None for s in self.slots])
+        tok, cache, outs = _decode_chunk(
+            self.params, self.cfg, self._next_token, self.cache,
+            jnp.asarray(budgets, jnp.int32), jnp.asarray(alive),
+            n_eff, self.ecfg.eos_token)
+        self._next_token = tok
+        self.cache = cache
+        outs = np.asarray(outs)               # (n_eff, 3, B) — one transfer
+        self.host_syncs += 1
+        toks, emits, retires = outs[:, 0], outs[:, 1], outs[:, 2]
+        retired: List[int] = []
+        for t in range(n_eff):
+            for i in active:
+                if not emits[t, i]:
+                    continue
+                s = self.slots[i]
+                s.generated.append(int(toks[t, i]))
+                s.budget -= 1
+                if retires[t, i]:
+                    self.results[s.request_id] = self._result(
+                        s, self._steps + t + 1)
+                    retired.append(s.request_id)
+                    # device-side state (kv_len, next token) was already
+                    # released inside the chunk
+                    self._release_slot_host(i)
+        self._steps += n_eff
         if retired:
             self._admit()
         return retired
@@ -140,11 +264,17 @@ class LLMEngine:
                 return True
         return False
 
-    def run_to_completion(self, max_iters: int = 10000) -> Dict[int, dict]:
+    def run_to_completion(self, max_iters: int = 10000,
+                          chunk: int = 1) -> Dict[int, dict]:
+        """Drain queue + slots. ``chunk > 1`` decodes via :meth:`step_n`
+        whenever no admission is pending (one host sync per chunk)."""
         it = 0
         while (self.queue or any(s.request_id is not None
                                  for s in self.slots)):
-            self.step()
+            if chunk > 1:
+                self.step_n(chunk)
+            else:
+                self.step()
             it += 1
             if it > max_iters:
                 raise RuntimeError("engine did not drain")
@@ -175,15 +305,21 @@ class LLMEngine:
                                self.ecfg.block_size)
 
     # -- internals -------------------------------------------------------------
+    def _release_slot_host(self, i: int) -> None:
+        """Host-side half of slot retirement: drop KV-block references and
+        reset the slot record (``step_n`` chunks already performed the
+        device-side release inside the scan)."""
+        s = self.slots[i]
+        if self.kv is not None and s.block_ids:
+            self.kv.cache.release(s.block_ids)
+        self.slots[i] = _Slot()
+
     def _release_slot(self, i: int) -> None:
         """Retire/cancel slot ``i``: drop its KV-block references and zero its
         ``kv_len`` so ``decode_step`` stops attending over the dead slot's KV
         (stale lengths previously kept streaming the dead cache until the
         slot's next reuse)."""
-        s = self.slots[i]
-        if self.kv is not None and s.block_ids:
-            self.kv.cache.release(s.block_ids)
-        self.slots[i] = _Slot()
+        self._release_slot_host(i)
         self.cache = self.cache._replace(
             kv_len=self.cache.kv_len.at[i].set(0))
         self._next_token = self._next_token.at[i, 0].set(0)
@@ -219,6 +355,11 @@ class LLMEngine:
             self._prefill_into(i, request_id, tokens, budget, extra,
                                submit_step)
 
+    def _bucket_len(self, n: int) -> int:
+        """Smallest prefill-bucket multiple >= n, capped at max_seq."""
+        b = self.ecfg.prefill_bucket
+        return min(-(-n // b) * b, self.ecfg.max_seq)
+
     def _prefill_into(self, slot: int, request_id: int, tokens: np.ndarray,
                       budget: int, extra: dict, submit_step: int = 0):
         e = self.ecfg
@@ -230,10 +371,36 @@ class LLMEngine:
             self.kv.cache.acquire(matched)
         prefix_len = len(matched) * (self.kv.block_size if self.kv else 0)
         if prefix_len:
-            logits, cache1 = lm.prefill_extend(
-                self.params, self.cfg,
-                {"tokens": jnp.asarray(tokens[prefix_len:], jnp.int32)[None]},
-                self.kv.gather(matched), max_seq=e.max_seq)
+            suffix = tokens[prefix_len:]
+            Sn = len(suffix)
+            Sn_pad = self._bucket_len(Sn) if self._bucket_ok else Sn
+            if self._bucket_ok and prefix_len + Sn_pad <= e.max_seq:
+                # compile-once admission: suffix padded to the bucket,
+                # prefix gathered at the fixed full-block budget — one
+                # executable per suffix bucket instead of one per distinct
+                # (matched-blocks, suffix-length) combination
+                pad_blocks = e.max_seq // self.kv.block_size
+                toks = np.zeros(Sn_pad, np.int32)
+                toks[:Sn] = suffix
+                logits, cache1 = _prefill_extend_bucketed(
+                    self.params, self.cfg, jnp.asarray(toks)[None],
+                    jnp.int32(Sn), self.kv.gather(matched, pad_to=pad_blocks),
+                    jnp.int32(prefix_len), e.max_seq)
+            else:
+                logits, cache1 = lm.prefill_extend(
+                    self.params, self.cfg,
+                    {"tokens": jnp.asarray(suffix, jnp.int32)[None]},
+                    self.kv.gather(matched), max_seq=e.max_seq)
+        elif self._bucket_ok:
+            # pad the prompt to the bucket; logits are read at the true last
+            # row and kv_len masks the tail, so outputs match exact-length
+            # prefill while all lengths in a bucket share one executable
+            L_pad = self._bucket_len(L)
+            toks = np.zeros(L_pad, np.int32)
+            toks[:L] = tokens
+            logits, cache1 = _prefill_bucketed(
+                self.params, self.cfg, jnp.asarray(toks)[None],
+                jnp.int32(L), e.max_seq)
         else:
             batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
             if self.cfg.family == "audio":

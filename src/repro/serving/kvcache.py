@@ -297,10 +297,19 @@ class PagedKVStore:
         self.pools: List[Tuple[jnp.ndarray, jnp.ndarray]] = [
             (jnp.zeros(shp, dt), jnp.zeros(shp, dt)) for _ in cfg.pattern]
 
-    def gather(self, blocks: Sequence[int]):
+    def gather(self, blocks: Sequence[int], pad_to: Optional[int] = None):
         """Prefix K/V for ``models.lm.prefill_extend``: tuple over pattern
-        positions of (k, v), each ``(P, 1, len(blocks)*bs, H, D)``."""
-        ids = jnp.asarray(list(blocks), jnp.int32)
+        positions of (k, v), each ``(P, 1, len(blocks)*bs, H, D)``.
+
+        ``pad_to`` pads the block list to a fixed count with block 0 (the
+        compile-once admission path: every gather then has the same static
+        shape; the garbage tail rows are masked out by the dynamic
+        ``prefix_len`` in the bucketed ``prefill_extend``)."""
+        ids_list = list(blocks)
+        if pad_to is not None:
+            assert pad_to >= len(ids_list)
+            ids_list = ids_list + [0] * (pad_to - len(ids_list))
+        ids = jnp.asarray(ids_list, jnp.int32)
         out = []
         for k_pool, v_pool in self.pools:
             def view(pool):

@@ -164,15 +164,28 @@ class ClusterServer:
         explicit ``now``) — never at wall-clock ``time.monotonic()``."""
         self.monitor.heartbeat(node, now=self.ticks if now is None else now)
 
-    def step(self):
-        """One scheduling tick: every engine advances one decode iteration."""
+    def step(self, chunk: int = 1):
+        """One scheduling tick: every engine advances one decode iteration.
+
+        ``chunk > 1`` advances each engine by up to ``chunk`` fused decode
+        iterations via ``LLMEngine.step_n`` — engines with queued admissions
+        fall back to a single iteration internally, so chunking only fuses
+        where no admission is pending. Hedging/latency bookkeeping advances
+        by the iterations each request's engine *actually* executed (a
+        congested engine that fell back to one iteration must not age its
+        requests by the whole chunk, or stragglers would hedge chunk-times
+        early exactly where the cluster is already loaded); the scheduler
+        clock stays one tick per call."""
         self.ticks += 1
         pair_node = np.asarray(self.router.arrays.pair_node)
+        advanced: Dict[int, int] = {}
         for pair, eng in self.engines.items():
             node = int(pair_node[pair])
             if not self.monitor.healthy_mask()[node]:
                 continue  # crashed node makes no progress
-            retired = eng.step()
+            steps_before = eng._steps
+            retired = eng.step_n(chunk) if chunk > 1 else eng.step()
+            advanced[pair] = eng._steps - steps_before
             for rid in retired:
                 if rid in self.inflight:
                     fl = self.inflight.pop(rid)
@@ -188,9 +201,10 @@ class ClusterServer:
                         # exactly one dispatch was charged to the loser node;
                         # close it even if the copy already drained
                         self.monitor.on_cancel(int(pair_node[loser]))
-        # straggler hedging
+        # straggler hedging: age each request by its own engine's progress
+        # (min 1 keeps the chunk=1 semantics for idle/crashed engines)
         for rid, fl in list(self.inflight.items()):
-            fl.iters += 1
+            fl.iters += max(advanced.get(fl.pair, 0), 1)
             if fl.iters > self.hedge_after and fl.hedge_pair is None:
                 backup = self.router.backup_pair(fl.pair)
                 if backup is not None:
@@ -198,10 +212,10 @@ class ClusterServer:
                     self._hedges += 1
                     self._dispatch(fl.sreq, backup)
 
-    def run(self, max_ticks: int = 2000) -> Dict[int, dict]:
+    def run(self, max_ticks: int = 2000, chunk: int = 1) -> Dict[int, dict]:
         t = 0
         while self.inflight:
-            self.step()
+            self.step(chunk=chunk)
             t += 1
             if t > max_ticks:
                 raise RuntimeError(

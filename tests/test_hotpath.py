@@ -1,0 +1,364 @@
+"""Compile-once hot paths: bucketed trace evaluation, jit-cache reuse across
+re-fit windows and NSGA-II instances, host-sync-free engine stepping, the
+prefill bucket, and device-sharded population fitness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.spec import paper_testbed
+from repro.configs import get
+from repro.core import nsga2 as nsga2_mod
+from repro.core.fitness import (EvalConfig, TraceEvaluator, _run_trace,
+                                bucket_size, next_pow2, population_mesh)
+from repro.core.nsga2 import NSGA2, NSGA2Config
+from repro.core.pareto import dominance_matrix, non_dominated_sort
+from repro.core.policy import (AFFINITY_DEFAULTS, PAPER_DEFAULTS,
+                               SLO_BOUNDS_HI, SLO_BOUNDS_LO, SLO_DEFAULTS)
+from repro.models import lm
+from repro.serving import engine as engine_mod
+from repro.serving.engine import EngineConfig, LLMEngine
+from repro.workload.sessions import SessionConfig, build_session_trace
+from repro.workload.slo import attach_slos
+from repro.workload.trace import build_trace
+
+from _hypothesis_compat import given, settings, st  # soft optional dep
+
+CLUSTER = paper_testbed()
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get("stablelm-3b").smoke()
+    params = lm.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# bucket arithmetic
+# ---------------------------------------------------------------------------
+
+def test_bucket_size():
+    assert next_pow2(1) == 1 and next_pow2(129) == 256
+    assert bucket_size(150, "pow2") == 256
+    assert bucket_size(256, "pow2") == 256
+    assert bucket_size(33, 32) == 64
+    assert bucket_size(32, 32) == 32
+
+
+# ---------------------------------------------------------------------------
+# masked-tail invariance: padded trace ≡ unpadded, every policy kind
+# ---------------------------------------------------------------------------
+
+def _res_equal(a, b):
+    assert np.allclose(a.q, b.q) and np.allclose(a.cost, b.cost)
+    assert np.allclose(a.rt, b.rt) and np.allclose(a.ttft, b.ttft)
+    assert np.allclose(float(a.violation), float(b.violation))
+    assert (np.asarray(a.assign) == np.asarray(b.assign)).all()
+    assert np.allclose(a.hit, b.hit)
+
+
+@pytest.mark.parametrize("mode", ["eq5", "queued"])
+def test_masked_tail_invariance_closed_loop(mode):
+    tr = build_trace(75, seed=0)
+    attach_slos(tr, seed=0)
+    cfg = EvalConfig(mode=mode, concurrency=4)
+    plain = TraceEvaluator(tr, CLUSTER, cfg)
+    padded = TraceEvaluator(tr, CLUSTER, cfg, bucket="pow2")
+    assert padded.n_padded == 128 and padded.n_valid == 75
+    _res_equal(plain.run_thresholds(PAPER_DEFAULTS),
+               padded.run_thresholds(PAPER_DEFAULTS))
+    _res_equal(plain.run_slo_policy(SLO_DEFAULTS),
+               padded.run_slo_policy(SLO_DEFAULTS))
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, CLUSTER.n_pairs, size=75)
+    _res_equal(plain.run_assignment(assign), padded.run_assignment(assign))
+
+
+def test_masked_tail_invariance_prefix_cache():
+    """Open-loop session trace with the cache model on: padding must not
+    leak into queue *or* cache-carry state."""
+    tr = build_session_trace(SessionConfig(n_sessions=8, mean_turns=3.0),
+                             seed=1, n_requests=50)
+    attach_slos(tr, seed=1)
+    cfg = EvalConfig(mode="open", prefix_cache=True)
+    plain = TraceEvaluator(tr, CLUSTER, cfg)
+    padded = TraceEvaluator(tr, CLUSTER, cfg, bucket="pow2")
+    _res_equal(plain.run_affinity_policy(AFFINITY_DEFAULTS),
+               padded.run_affinity_policy(AFFINITY_DEFAULTS))
+    s1 = plain.summarize(plain.run_affinity_policy(AFFINITY_DEFAULTS))
+    s2 = padded.summarize(padded.run_affinity_policy(AFFINITY_DEFAULTS))
+    for k in s1:
+        assert np.isclose(s1[k], s2[k]), k
+
+
+def test_padded_fitness_matches_unpadded():
+    tr = build_trace(60, seed=2)
+    attach_slos(tr, seed=2)
+    cfg = EvalConfig(concurrency=4)
+    plain = TraceEvaluator(tr, CLUSTER, cfg)
+    padded = TraceEvaluator(tr, CLUSTER, cfg, bucket="pow2")
+    g = jnp.asarray(np.random.default_rng(0).uniform(
+        size=(6, 2)).astype(np.float32)) * jnp.asarray([0.8, 20.0]) \
+        + jnp.asarray([0.3, 0.0])
+    F1, v1 = plain.make_fitness("slo", objectives="qoe")(g, jax.random.key(0))
+    F2, v2 = padded.make_fitness("slo", objectives="qoe")(g, jax.random.key(0))
+    assert np.allclose(F1, F2, rtol=1e-5, atol=1e-7)
+    assert np.allclose(v1, v2)
+
+
+# ---------------------------------------------------------------------------
+# compile reuse: re-fits across window sizes / NSGA2 instances share traces
+# ---------------------------------------------------------------------------
+
+def test_refit_compile_reuse_across_windows_and_instances():
+    cfg = NSGA2Config(pop_size=8, n_generations=2,
+                      lo=jnp.asarray(SLO_BOUNDS_LO),
+                      hi=jnp.asarray(SLO_BOUNDS_HI))
+
+    def refit(n, seed):
+        tr = build_trace(n, seed=seed)
+        attach_slos(tr, seed=seed)
+        ev = TraceEvaluator(tr, CLUSTER, EvalConfig(concurrency=4),
+                            bucket="pow2")
+        opt = NSGA2(ev.make_fitness("slo", objectives="qoe"), cfg)
+        return jax.block_until_ready(
+            opt.evolve_scan(jax.random.key(seed), 2).genomes)
+
+    refit(70, 0)  # first re-fit compiles
+    runs_before = nsga2_mod._nsga2_run._cache_size()
+    traces_before = _run_trace._cache_size()
+    # different window length (same pow2 bucket), fresh evaluator + NSGA2
+    refit(90, 1)
+    refit(100, 2)
+    assert nsga2_mod._nsga2_run._cache_size() == runs_before, \
+        "re-fit across windows retraced the NSGA-II run"
+    assert _run_trace._cache_size() == traces_before, \
+        "re-fit across windows retraced the trace evaluator"
+
+
+def test_fitness_kernel_identity_is_stable():
+    """make_fitness hands NSGA2 the same kernel object for equal statics."""
+    tr1 = build_trace(40, seed=0)
+    tr2 = build_trace(55, seed=1)
+    for t in (tr1, tr2):
+        attach_slos(t, seed=0)
+    ev1 = TraceEvaluator(tr1, CLUSTER, EvalConfig(concurrency=4),
+                         bucket="pow2")
+    ev2 = TraceEvaluator(tr2, CLUSTER, EvalConfig(concurrency=4),
+                         bucket="pow2")
+    f1 = ev1.make_fitness("slo", objectives="qoe")
+    f2 = ev2.make_fitness("slo", objectives="qoe")
+    assert f1.kernel is f2.kernel
+    # different static config -> different kernel
+    f3 = ev1.make_fitness("slo", objectives="paper")
+    assert f3.kernel is not f1.kernel
+
+
+def test_warm_start_archive_dynamic():
+    """evolve_scan(archive=...) warm-starts without a fresh trace."""
+    tr = build_trace(50, seed=0)
+    attach_slos(tr, seed=0)
+    ev = TraceEvaluator(tr, CLUSTER, EvalConfig(concurrency=4),
+                        bucket="pow2")
+    cfg = NSGA2Config(pop_size=8, n_generations=2,
+                      lo=jnp.asarray(SLO_BOUNDS_LO),
+                      hi=jnp.asarray(SLO_BOUNDS_HI))
+    opt = NSGA2(ev.make_fitness("slo", objectives="qoe"), cfg)
+    s0 = opt.evolve_scan(jax.random.key(0), 2)
+    before = nsga2_mod._nsga2_run._cache_size()
+    s1 = opt.evolve_scan(jax.random.key(1), 2, archive=s0.genomes)
+    # warm-started run has its own trace (extra archive arg) but repeats
+    # must reuse it
+    s2 = opt.evolve_scan(jax.random.key(2), 2, archive=s1.genomes)
+    assert nsga2_mod._nsga2_run._cache_size() <= before + 1
+    assert s2.genomes.shape == s0.genomes.shape
+
+
+# ---------------------------------------------------------------------------
+# top-P early-exit non-dominated sort
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(8, 24), st.integers(2, 4))
+def test_top_p_sort_matches_full_sort_up_to_cutoff(seed, P, M):
+    rng = np.random.default_rng(seed)
+    F = jnp.asarray(rng.normal(size=(P, M)).astype(np.float32))
+    full = np.asarray(non_dominated_sort(F))
+    top = P // 2
+    part = np.asarray(non_dominated_sort(F, top=top))
+    # the fronts peeled before the quota filled are identical; everything
+    # beyond carries the sentinel last rank
+    order = np.argsort(full, kind="stable")
+    n_ranked = 0
+    cutoff_rank = 0
+    for r in range(P):
+        cnt = int((full == r).sum())
+        if cnt == 0:
+            break
+        n_ranked += cnt
+        cutoff_rank = r
+        if n_ranked >= top:
+            break
+    done = full <= cutoff_rank
+    assert (part[done] == full[done]).all()
+    assert (part[~done] == P - 1).all()
+    del order
+
+
+def test_top_p_sort_dominance_matrix_arg():
+    F = jnp.asarray(np.random.default_rng(0).normal(size=(12, 3)),
+                    jnp.float32)
+    dom = dominance_matrix(F)
+    assert (np.asarray(non_dominated_sort(F, dom, top=6))
+            == np.asarray(non_dominated_sort(F, top=6))).all()
+
+
+# ---------------------------------------------------------------------------
+# engine: step_n parity + prefill bucket jit-cache regression
+# ---------------------------------------------------------------------------
+
+def test_step_n_token_parity_and_sync_reduction(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    prompts = {i: rng.integers(0, cfg.vocab, size=5 + 2 * i)
+               for i in range(3)}
+
+    def run(chunk):
+        eng = LLMEngine(cfg, params, EngineConfig(max_slots=3, max_seq=64,
+                                                  max_new_tokens=10))
+        for i, p in prompts.items():
+            eng.submit(i, p, max_new_tokens=6 + i)
+        res = eng.run_to_completion(chunk=chunk)
+        return res, eng.host_syncs
+
+    r1, syncs1 = run(1)
+    rN, syncsN = run(8)
+    for i in r1:
+        assert r1[i]["tokens"] == rN[i]["tokens"], i
+        assert r1[i]["ttft_steps"] == rN[i]["ttft_steps"], i
+        assert r1[i]["finish_step"] == rN[i]["finish_step"], i
+    assert syncsN < syncs1, (syncs1, syncsN)
+
+
+def test_step_n_with_queued_work_falls_back(tiny_model):
+    """step_n must stay exact when admissions are pending: 6 requests
+    through 2 slots (continuous batching admits mid-run)."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(4)
+    prompts = {i: rng.integers(0, cfg.vocab, size=6) for i in range(6)}
+
+    def run(chunk):
+        eng = LLMEngine(cfg, params, EngineConfig(max_slots=2, max_seq=64,
+                                                  max_new_tokens=4))
+        for i, p in prompts.items():
+            eng.submit(i, p)
+        return eng.run_to_completion(chunk=chunk)
+
+    r1, rN = run(1), run(8)
+    assert sorted(rN) == list(range(6))
+    for i in r1:
+        assert r1[i]["tokens"] == rN[i]["tokens"], i
+
+
+def test_prefill_bucket_jit_cache_regression(tiny_model):
+    """Admission pads prompts to the bucket: many distinct prompt lengths
+    must share one compiled prefill executable per bucket."""
+    cfg, params = tiny_model
+    before = engine_mod._prefill_bucketed._cache_size()
+    eng = LLMEngine(cfg, params, EngineConfig(max_slots=2, max_seq=64,
+                                              max_new_tokens=2,
+                                              prefill_bucket=32))
+    rng = np.random.default_rng(5)
+    for i, n in enumerate(range(4, 18)):      # 14 distinct prompt lengths
+        eng.submit(i, rng.integers(0, cfg.vocab, size=n))
+        eng.run_to_completion()
+    after = engine_mod._prefill_bucketed._cache_size()
+    assert after - before <= 1, \
+        f"bucketed prefill retraced per length: {after - before} new entries"
+
+
+def test_prefill_bucket_matches_offline_greedy(tiny_model):
+    """Padding + dynamic last-row logits must not perturb outputs."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(6)
+    tokens = rng.integers(0, cfg.vocab, size=9)
+    eng = LLMEngine(cfg, params, EngineConfig(max_slots=1, max_seq=64,
+                                              max_new_tokens=5,
+                                              prefill_bucket=32))
+    eng.submit(0, tokens)
+    got = eng.run_to_completion()[0]["tokens"]
+    toks = list(tokens)
+    want = []
+    for _ in range(5):
+        logits, _ = lm.train_logits(params, cfg,
+                                    {"tokens": jnp.asarray([toks])})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        toks.append(nxt)
+    assert got == want
+
+
+def test_prefix_cache_bucketed_extend_exact(tiny_model):
+    """Bucketed prefix-extension admission (padded suffix + fixed-size
+    prefix gather) stays byte-identical to the non-caching engine."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, cfg.vocab, size=16)
+    ecfg = dict(max_slots=2, max_seq=64, max_new_tokens=4, block_size=8,
+                cache_blocks=16)
+    plain = LLMEngine(cfg, params, EngineConfig(**ecfg))
+    cached = LLMEngine(cfg, params, EngineConfig(prefix_cache=True, **ecfg))
+    for rid, ext in enumerate((0, 3, 7)):   # shared 16-token prefix
+        toks = np.concatenate([base, rng.integers(0, cfg.vocab, size=ext)]) \
+            if ext else base
+        for eng in (plain, cached):
+            eng.submit(100 + rid, toks)
+            eng.run_to_completion()
+    for rid in (100, 101, 102):
+        assert plain.results[rid]["tokens"] == cached.results[rid]["tokens"]
+    st_ = cached.cache_stats()
+    assert st_["prefill_tokens_run"] < st_["prefill_tokens_total"]
+
+
+# ---------------------------------------------------------------------------
+# device-sharded population fitness
+# ---------------------------------------------------------------------------
+
+def test_sharded_fitness_single_device_mesh_equivalence():
+    """In-process equivalence on whatever devices exist (>= 1)."""
+    tr = build_trace(40, seed=0)
+    attach_slos(tr, seed=0)
+    ev = TraceEvaluator(tr, CLUSTER, EvalConfig(concurrency=4),
+                        bucket="pow2")
+    mesh = population_mesh()
+    g = jnp.asarray([[0.9, 3.0], [0.5, 1.0], [1.0, 10.0]], jnp.float32)
+    F0, v0 = ev.make_fitness("slo", objectives="qoe")(g, jax.random.key(0))
+    F1, v1 = ev.make_fitness("slo", objectives="qoe", mesh=mesh)(
+        g, jax.random.key(0))
+    assert np.allclose(F0, F1, rtol=1e-5, atol=1e-7)
+    assert np.allclose(v0, v1)
+
+
+@pytest.mark.slow
+def test_sharded_fitness_multi_device_subprocess():
+    """True multi-device equivalence: XLA_FLAGS must precede the jax
+    import, so this runs the hotpath benchmark's worker in a subprocess."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.hotpath", "--worker-ndev", "2",
+         "--smoke"],
+        env=env, cwd=root, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr
+    import json
+    out = json.loads([ln for ln in proc.stdout.splitlines()
+                      if ln.startswith("{")][-1])
+    assert out["ndev"] == 2 and out["allclose"], out
