@@ -61,7 +61,7 @@ def run():
     for pop in (32, 100, 256):
         cfg = NSGA2Config(pop_size=pop, n_generations=20,
                           lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-        opt = NSGA2(ev.make_fitness("continuous"), cfg)
+        opt = NSGA2(ev.make_fitness("threshold"), cfg)
         state = opt.evolve_scan(jax.random.key(0), 20)   # compile
         jax.block_until_ready(state.F)
         t0 = time.perf_counter()

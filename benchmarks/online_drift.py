@@ -112,7 +112,7 @@ def tune_window0(ev: TraceEvaluator, seed: int = 0) -> np.ndarray:
     """The shared starting policy: NSGA-II over window 0's QoE fitness."""
     cfg = NSGA2Config(pop_size=POP, n_generations=GENS,
                       lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-    opt = NSGA2(ev.make_fitness("continuous", objectives="qoe"), cfg)
+    opt = NSGA2(ev.make_fitness("threshold", objectives="qoe"), cfg)
     state = opt.evolve_scan(jax.random.key(seed), GENS)
     genome, _ = opt.select_by_weights(state, jnp.asarray(WEIGHTS))
     return np.asarray(genome, np.float32)

@@ -1,0 +1,126 @@
+"""Policy matrix: every registered RoutingPolicy on one shared workload.
+
+The registry (``repro.core.policies``) makes the policy the unit of
+extension; this benchmark is the harness half of that contract: it
+enumerates ``list_policies()`` at run time, NSGA-II-fits each policy with a
+config derived from its own ``GenomeSpec``
+(``NSGA2Config.from_policy``), and evaluates both the hand defaults (when
+the spec carries any) and the tuned genome on one shared open-loop
+multi-turn session trace with the prefix-cache model enabled — so a policy
+module dropped into ``core/policies/`` shows up here with **zero edits**.
+
+Per policy the matrix reports quality, cost, response time, TTFT, SLO
+attainment, cache hit fraction, and the wall-clock NSGA-II fit time.
+Writes ``results/policy_matrix.csv`` + ``BENCH_policy_matrix.json``
+(``*_smoke`` variants under ``--smoke`` so CI cannot clobber committed
+full-sweep results).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.spec import paper_testbed
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.nsga2 import NSGA2, NSGA2Config
+from repro.core.policies import get_policy, list_policies
+from repro.workload.sessions import SessionConfig, build_session_trace
+from repro.workload.slo import attach_slos
+
+from .common import timed, write_bench_json, write_csv
+
+N_REQUESTS = 192
+POP, GENS = 16, 12
+TIGHTNESS = 2.0
+# Eq. (1)-style selection weights over (RQ, C, RT, V) for the NSGA pick
+WEIGHTS = (0.25, 0.30, 0.30, 0.15)
+
+SMOKE = "--smoke" in sys.argv    # CI: tiny shapes, same code path
+
+
+def _workload(seed: int):
+    n = 48 if SMOKE else N_REQUESTS
+    cfg = SessionConfig(n_sessions=max(2, n // 3), mean_turns=3.0,
+                        session_rate=1.5, think_time_s=3.0)
+    tr = build_session_trace(cfg, seed=seed, n_requests=n)
+    attach_slos(tr, tightness=TIGHTNESS, seed=seed)
+    return tr
+
+
+def run(seed: int = 0):
+    cluster = paper_testbed()
+    tr = _workload(seed)
+    ev = TraceEvaluator(tr, cluster,
+                        EvalConfig(mode="open", prefix_cache=True),
+                        bucket="pow2")
+    pop = 8 if SMOKE else POP
+    gens = 4 if SMOKE else GENS
+
+    rows, bench = [], {}
+    for name in list_policies():
+        pol = get_policy(name)
+        spec = pol.genome_spec
+        if spec.per_request:
+            cfg = NSGA2Config.from_policy(pol, pop_size=pop,
+                                          n_generations=gens,
+                                          genome_length=tr.n_requests,
+                                          n_choices=cluster.n_pairs)
+        else:
+            cfg = NSGA2Config.from_policy(pol, pop_size=pop,
+                                          n_generations=gens)
+        opt = NSGA2(ev.make_fitness(name, objectives="qoe"), cfg)
+        state, fit_s = timed(
+            lambda o=opt: o.evolve_scan(jax.random.key(seed), gens),
+            warmup=0, iters=1)
+        genome, _ = opt.select_by_weights(state, jnp.asarray(WEIGHTS))
+
+        variants = {"tuned": np.asarray(genome)}
+        if spec.defaults is not None:
+            variants["default"] = np.asarray(spec.defaults)
+        for variant, g in variants.items():
+            s = ev.summarize(ev.run_policy(name, g))
+            rows.append([name, variant, f"{s['avg_quality']:.4f}",
+                         f"{s['avg_cost']:.4e}",
+                         f"{s['avg_response_time']:.4f}",
+                         f"{s['avg_ttft']:.4f}",
+                         f"{s['slo_attainment']:.4f}",
+                         f"{s['cache_hit_frac']:.4f}", f"{fit_s:.3f}"])
+            bench[f"{name}.{variant}"] = {
+                "policy": name, "variant": variant,
+                "avg_quality": s["avg_quality"], "avg_cost": s["avg_cost"],
+                "avg_rt_s": s["avg_response_time"],
+                "slo_attainment": s["slo_attainment"],
+                "cache_hit_frac": s["cache_hit_frac"],
+                "nsga2_fit_s": fit_s,
+            }
+
+    suffix = "_smoke" if SMOKE else ""
+    write_csv(f"policy_matrix{suffix}.csv",
+              ["policy", "variant", "avg_quality", "avg_cost", "avg_rt_s",
+               "avg_ttft_s", "slo_attainment", "cache_hit_frac",
+               "nsga2_fit_s"], rows)
+    write_bench_json(f"policy_matrix{suffix}", {
+        "n_requests": tr.n_requests, "pop_size": pop, "generations": gens,
+        "policies": bench,
+    })
+    return rows, bench
+
+
+def main():
+    rows, bench = run()
+    for key, r in bench.items():
+        print(f"policy_matrix.{key},{r['nsga2_fit_s'] * 1e6:.0f},"
+              f"quality={r['avg_quality']:.4f} cost={r['avg_cost']:.4e} "
+              f"rt={r['avg_rt_s']:.4f} attain={r['slo_attainment']:.4f} "
+              f"hit={r['cache_hit_frac']:.4f}")
+    # the registry contract: every registered policy produced a tuned row
+    missing = [p for p in list_policies()
+               if f"{p}.tuned" not in bench]
+    assert not missing, f"policy matrix missed registered policies: {missing}"
+
+
+if __name__ == "__main__":
+    main()

@@ -38,7 +38,7 @@ def optimize_router(ev: TraceEvaluator, pop: int = 100, gens: int = 100,
                     seed: int = 42):
     cfg = NSGA2Config(pop_size=pop, n_generations=gens,
                       lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-    opt = NSGA2(ev.make_fitness("continuous"), cfg)
+    opt = NSGA2(ev.make_fitness("threshold"), cfg)
     t0 = time.time()
     state = opt.evolve_scan(jax.random.key(seed), gens)
     jax.block_until_ready(state.F)

@@ -22,7 +22,7 @@ def main():
     ev = TraceEvaluator(trace, paper_testbed(), EvalConfig(concurrency=1))
     cfg = NSGA2Config(pop_size=64, n_generations=60,
                       lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-    opt = NSGA2(ev.make_fitness("continuous"), cfg)
+    opt = NSGA2(ev.make_fitness("threshold"), cfg)
     state = opt.evolve_scan(jax.random.key(3), 60)
     genomes, F = opt.pareto_front(state)
     F = np.asarray(F)

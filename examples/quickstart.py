@@ -38,7 +38,7 @@ def main():
     print("\nevolving routing policies (NSGA-II, pop=100) ...")
     cfg = NSGA2Config(pop_size=100, n_generations=60,
                       lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-    opt = NSGA2(ev.make_fitness("continuous"), cfg)
+    opt = NSGA2(ev.make_fitness("threshold"), cfg)
     t0 = time.time()
     state = opt.evolve_scan(jax.random.key(42), 60)
     dt = time.time() - t0

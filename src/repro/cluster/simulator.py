@@ -16,6 +16,16 @@ prompt's whole-block prefix stays resident on its node, and a later request
 of the same session (or sharing the same system prompt) on that node pays
 only the uncached prefill fraction plus a discounted price for cached prompt
 tokens — the equivalence property extends to this regime.
+
+Both oracles can also make the routing decision *themselves*: pass
+``policy=<registry name>, genome=...`` instead of ``assign`` and every
+dispatch builds the same ``PolicyInputs`` bundle the JAX scan builds (busy
+slots at arrival, per-pair cache hit fractions, deadline contract, float32
+estimate rows) and calls ``RoutingPolicy.decide_py`` through the registry —
+no per-policy mirroring here, so new policy modules get DES-oracle coverage
+(and the JAX/DES equivalence property, tests/test_online.py) for free.
+Per-policy decision state (e.g. the budget spend ledger) threads through
+``RoutingPolicy.update_py`` in dispatch order, exactly like the scan carry.
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.policies import PolicyInputs, get_policy
 from ..workload.trace import Trace
 from .spec import ClusterSpec
 
@@ -91,9 +102,12 @@ class ClusterSimulator:
         self.prefill = np.asarray(tables.prefill_time)
         self.tpot_pair = np.asarray(tables.tpot)
         self.prompt_cost = np.asarray(tables.prompt_cost)
-        self.pair_node = np.asarray(arrays.pair_node)
-        self.node_conc = np.asarray(arrays.node_conc)
         self.arrays = arrays
+        # host-side view for per-dispatch policy decisions (no device
+        # transfers inside the event loop)
+        self.np_arrays = arrays.numpy()
+        self.pair_node = self.np_arrays.pair_node
+        self.node_conc = self.np_arrays.node_conc
 
     # -- prefix-cache mirror (independent of the JAX carry implementation) ----
     def _cache_state(self):
@@ -147,11 +161,57 @@ class ClusterSimulator:
                 * self.prompt_cost[i, pair])
         return hf, service, prefill, cost
 
-    def run(self, assign: Sequence[int], concurrency: int = 1,
+    # -- registry-driven in-loop decisions -----------------------------------
+    def _resolve_policy(self, policy, genome, assign):
+        """Validate the (policy, genome) / assign alternative and return
+        (RoutingPolicy | None, cast genome, init decision state)."""
+        if policy is None:
+            assert assign is not None, "need either assign or policy+genome"
+            return None, None, None
+        pol = get_policy(policy)        # ValueError lists registered names
+        assert genome is not None, f"policy {pol.name!r} needs a genome"
+        g = np.asarray(genome,
+                       np.int32 if pol.genome_spec.discrete else np.float32)
+        return pol, g, pol.init_state()
+
+    def _policy_inputs(self, i: int, busy, cache, now: float) -> PolicyInputs:
+        """The DES twin of the JAX scan's decision context: same float32
+        table rows, busy-slot counts at arrival, whole-block cache hit
+        fractions, and deadline contract (+inf without SLOs)."""
+        tr = self.trace
+        n_nodes = len(self.cluster.nodes)
+        if cache is not None:
+            hit_node = np.asarray(
+                [self._cache_hit(cache, i, n) for n in range(n_nodes)],
+                np.float32)
+            hit = hit_node[self.pair_node]
+        else:
+            hit = np.zeros(len(self.pair_node), np.float32)
+        has_slos = tr.has_slos
+        return PolicyInputs(
+            index=np.int32(i), now=np.float32(now),
+            complexity=np.float32(tr.complexity[i]),
+            pred_category=np.int32(tr.pred_category[i]),
+            pred_conf=np.float32(tr.pred_conf[i]),
+            ttft_deadline=np.float32(tr.ttft_deadline[i] if has_slos
+                                     else np.inf),
+            tpot_deadline=np.float32(tr.tpot_deadline[i] if has_slos
+                                     else np.inf),
+            prompt_tokens=np.float32(tr.prompt_tokens[i]),
+            up=self.up[i], prefill=self.prefill[i], tpot=self.tpot_pair,
+            cost=self.cost[i], prompt_cost=self.prompt_cost[i],
+            hit_frac=hit, queue_len=np.asarray(busy, np.int64))
+
+    def run(self, assign: Optional[Sequence[int]] = None,
+            concurrency: int = 1,
             down_nodes: Optional[Dict[int, Tuple[float, float]]] = None,
             on_failure: Optional[Callable[[int, int], int]] = None,
-            arrivals: Optional[Sequence[float]] = None) -> SimResult:
-        """Execute the trace under assignment ``assign``.
+            arrivals: Optional[Sequence[float]] = None,
+            policy: Optional[str] = None, genome=None) -> SimResult:
+        """Execute the trace under assignment ``assign``, or — with
+        ``policy=``/``genome=`` — decide each request in-loop through the
+        RoutingPolicy registry (the DES twin of the JAX scan's in-scan
+        decisions).
 
         down_nodes: {node: (t_down, t_up)} crash windows. A request dispatched
         to a crashed node invokes ``on_failure(request, node) -> new_pair``
@@ -167,6 +227,7 @@ class ClusterSimulator:
         G = concurrency
         n_nodes = len(self.cluster.nodes)
         down_nodes = down_nodes or {}
+        pol, g, pstate = self._resolve_policy(policy, genome, assign)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
         if arrivals is not None:
@@ -196,7 +257,13 @@ class ClusterSimulator:
             c = i % G
             arrival = (float(arrivals[i]) if arrivals is not None
                        else client_ready[c])
-            pair = int(assign[i])
+            if pol is not None:
+                busy_slots = [sum(1 for f in slots[n] if f > arrival)
+                              for n in range(n_nodes)]
+                inp = self._policy_inputs(i, busy_slots, cache, arrival)
+                pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
+            else:
+                pair = int(assign[i])
             node = int(self.pair_node[pair])
 
             if node in down_nodes:
@@ -216,6 +283,8 @@ class ClusterSimulator:
             slots[node][s] = finish
             client_ready[c] = completion
             self._cache_admit(cache, i, node)
+            if pol is not None:
+                pstate = pol.update_py(g, pstate, inp, pair, cost_i)
 
             q[i] = self.quality[i, pair]
             cost[i] = cost_i
@@ -232,16 +301,21 @@ class ClusterSimulator:
                          node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit)
 
     # -- event-heap variant -------------------------------------------------
-    def run_event_heap(self, assign: Sequence[int], concurrency: int = 1,
-                       arrivals: Optional[Sequence[float]] = None
+    def run_event_heap(self, assign: Optional[Sequence[int]] = None,
+                       concurrency: int = 1,
+                       arrivals: Optional[Sequence[float]] = None,
+                       policy: Optional[str] = None, genome=None
                        ) -> SimResult:
         """Same semantics via an explicit event heap (belt-and-braces oracle:
         two independent queueing implementations must agree). With
         ``arrivals`` (or a trace carrying ``arrival_time``) every request's
-        issue event is scheduled at its own timestamp — open-loop mode."""
+        issue event is scheduled at its own timestamp — open-loop mode.
+        ``policy=``/``genome=`` decide each request at issue time through the
+        RoutingPolicy registry instead of a fixed ``assign``."""
         I = self.trace.n_requests
         G = concurrency
         n_nodes = len(self.cluster.nodes)
+        pol, g, pstate = self._resolve_policy(policy, genome, assign)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
 
@@ -274,7 +348,14 @@ class ClusterSimulator:
             t, _, kind, payload = heapq.heappop(heap)
             if kind == "issue":
                 i, c = payload
-                pair = int(assign[i]); node = int(self.pair_node[pair])
+                if pol is not None:
+                    busy_slots = [sum(1 for f in node_free[n] if f > t)
+                                  for n in range(n_nodes)]
+                    inp = self._policy_inputs(i, busy_slots, cache, t)
+                    pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
+                else:
+                    pair = int(assign[i])
+                node = int(self.pair_node[pair])
                 hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
                                                                     pair)
                 ready = t + self.up[i, pair]
@@ -284,6 +365,8 @@ class ClusterSimulator:
                 node_free[node][s] = finish
                 completion = finish + self.down[i, pair]
                 self._cache_admit(cache, i, node)
+                if pol is not None:
+                    pstate = pol.update_py(g, pstate, inp, pair, cost_i)
                 q[i] = self.quality[i, pair]; cost[i] = cost_i
                 rt[i] = completion - t; wait[i] = start - ready
                 ttft[i] = (start + prefill_i) - t

@@ -111,6 +111,11 @@ class ClusterArrays(NamedTuple):
     def n_nodes(self) -> int:
         return self.node_is_edge.shape[0]
 
+    def numpy(self) -> "ClusterArrays":
+        """Host-side view (every field as np.ndarray) for per-request hot
+        paths that must not pay device transfers per decision."""
+        return ClusterArrays(*(np.asarray(a) for a in self))
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:

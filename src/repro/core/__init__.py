@@ -3,6 +3,8 @@ from .nsga2 import NSGA2, NSGA2Config, NSGA2State
 from .objectives import Objectives, aggregate, overall_scores
 from .pareto import (crowding_distance, dominance_matrix, hypervolume_2d,
                      hypervolume_mc, non_dominated_sort, pareto_mask)
+from .policies import (GenomeSpec, PolicyInputs, RoutingPolicy, get_policy,
+                       list_policies, register_policy, runtime_policies)
 from .policy import (BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS, THRESHOLD_NAMES,
                      decide_pair_jnp, decide_pair_py)
 
@@ -12,4 +14,6 @@ __all__ = [
     "hypervolume_2d", "hypervolume_mc", "non_dominated_sort", "pareto_mask",
     "decide_pair_jnp", "decide_pair_py", "THRESHOLD_NAMES", "BOUNDS_LO",
     "BOUNDS_HI", "PAPER_DEFAULTS",
+    "GenomeSpec", "PolicyInputs", "RoutingPolicy", "register_policy",
+    "get_policy", "list_policies", "runtime_policies",
 ]

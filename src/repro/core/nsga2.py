@@ -77,6 +77,29 @@ class NSGA2Config:
         assert self.pop_size % 2 == 0, "pop_size must be even"
         assert self.genome in ("continuous", "discrete")
 
+    @classmethod
+    def from_policy(cls, policy, **overrides) -> "NSGA2Config":
+        """Derive the genome encoding from a registered RoutingPolicy.
+
+        ``policy`` is a registry name or RoutingPolicy object. Continuous
+        policies contribute their search bounds (D = GenomeSpec.length, so
+        genome-length defaults cannot drift from the decision rule);
+        discrete per-request policies ("direct") set ``genome="discrete"``
+        and require the caller to pass trace-dependent ``genome_length`` /
+        ``n_choices`` via ``overrides``. Other NSGA-II hyper-parameters
+        (pop_size, n_generations, ...) pass through ``overrides``.
+        """
+        from .policies import get_policy
+        pol = get_policy(policy) if isinstance(policy, str) else policy
+        spec = pol.genome_spec
+        if spec.discrete:
+            overrides.setdefault("genome", "discrete")
+            return cls(**overrides)
+        overrides.setdefault("genome", "continuous")
+        overrides.setdefault("lo", jnp.asarray(spec.lo))
+        overrides.setdefault("hi", jnp.asarray(spec.hi))
+        return cls(**overrides)
+
     @property
     def n_genes(self) -> int:
         """Genome dimensionality D implied by the config."""

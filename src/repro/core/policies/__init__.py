@@ -1,0 +1,104 @@
+"""Pluggable RoutingPolicy registry.
+
+One registry drives every consumer of routing decisions:
+
+* ``core.fitness._run_trace`` / ``TraceEvaluator.make_fitness`` — the JAX
+  evaluator resolves the policy by name (a jit-**static** argument, so each
+  policy identity compiles exactly one trace executable);
+* both DES oracles (``cluster.simulator.ClusterSimulator.run`` /
+  ``run_event_heap`` with ``policy=``) — in-loop decisions through the same
+  object, so the JAX/DES equivalence property covers new policies for free;
+* the runtime router (``core.router.RequestRouter(mode=<name>)``) including
+  its rolling-horizon ``maybe_reoptimize`` re-fit;
+* NSGA-II genome configuration (``core.nsga2.NSGA2Config.from_policy``).
+
+Adding a policy is **one file** in this package: subclass
+:class:`~repro.core.policies.base.RoutingPolicy`, call
+:func:`register_policy` at module bottom, and every consumer above picks it
+up automatically — modules in this package are auto-imported (sorted name
+order) on first import, so there is no central list to edit. See
+docs/architecture.md ("Policy registry & extension guide") for the
+contract details.
+
+Legacy spellings: ``make_fitness(genome="continuous"/"discrete")`` predate
+the registry and map to ``"threshold"``/``"direct"`` with a
+DeprecationWarning.
+"""
+from __future__ import annotations
+
+import importlib
+import pkgutil
+import warnings
+from typing import Dict, Tuple
+
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy  # noqa: F401
+
+_REGISTRY: Dict[str, RoutingPolicy] = {}
+
+# pre-registry genome-kind strings still accepted (with a warning)
+_LEGACY_ALIASES = {"continuous": "threshold", "discrete": "direct"}
+
+
+def register_policy(policy: RoutingPolicy) -> RoutingPolicy:
+    """Register ``policy`` under ``policy.name``. Idempotent for the same
+    object (module reloads); a *different* object under a taken name is an
+    error — policy identity is a jit cache key and must stay unambiguous."""
+    assert policy.name, "policy must set a non-empty name"
+    assert policy.name not in _LEGACY_ALIASES, \
+        f"{policy.name!r} is reserved as a legacy alias"
+    prev = _REGISTRY.get(policy.name)
+    if prev is not None and type(prev) is not type(policy):
+        raise ValueError(f"policy name {policy.name!r} already registered "
+                         f"by {type(prev).__name__}")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def canonical_policy_name(name: str) -> str:
+    """Map legacy genome-kind spellings onto registry names (warning), pass
+    canonical names through untouched."""
+    if name in _LEGACY_ALIASES:
+        canon = _LEGACY_ALIASES[name]
+        warnings.warn(
+            f"policy/genome kind {name!r} is deprecated; use {canon!r} "
+            f"(see core.policies)", DeprecationWarning, stacklevel=3)
+        return canon
+    return name
+
+
+def get_policy(name: str) -> RoutingPolicy:
+    """Resolve a policy by (canonical or legacy) name.
+
+    Raises ``ValueError`` naming every registered policy on unknown input —
+    the single error surface for ``make_fitness``, ``RequestRouter`` and the
+    DES oracles."""
+    canon = canonical_policy_name(name)
+    try:
+        return _REGISTRY[canon]
+    except KeyError:
+        raise ValueError(
+            f"unknown routing policy {name!r}; registered policies: "
+            f"{', '.join(list_policies())}") from None
+
+
+def list_policies() -> Tuple[str, ...]:
+    """Sorted names of every registered policy."""
+    return tuple(sorted(_REGISTRY))
+
+
+def runtime_policies() -> Tuple[str, ...]:
+    """Policies that can drive the runtime router (fixed-length genomes;
+    excludes per-request encodings like "direct")."""
+    return tuple(n for n in list_policies()
+                 if not _REGISTRY[n].genome_spec.per_request)
+
+
+# -- auto-discovery: a new policy is one module dropped into this package ----
+for _info in sorted(pkgutil.iter_modules(__path__), key=lambda m: m.name):
+    if _info.name != "base" and not _info.name.startswith("_"):
+        importlib.import_module(f"{__name__}.{_info.name}")
+del _info
+
+__all__ = ["GenomeSpec", "PolicyInputs", "RoutingPolicy", "register_policy",
+           "get_policy", "list_policies", "runtime_policies",
+           "canonical_policy_name"]

@@ -1,0 +1,123 @@
+"""Cache-affinity decision policy (prefix-reuse extension).
+
+The SLO decision with a cache-hit-probability term: the expected
+cached-prefix fraction per pair discounts both the prefill term of the TTFT
+estimate and the prompt part of the cost, and ρ adds an affinity bonus for
+pairs already holding the prefix. Genome: [γ, κ, ρ].
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...cluster.spec import ClusterArrays
+from . import register_policy
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy
+
+AFFINITY_PARAM_NAMES = ("gamma", "kappa", "rho")
+
+# γ, κ as in the SLO genome; ρ in [0, 4] weighs expected prefix-cache hits
+# beyond their realized discount (stickiness: a hit now also keeps the
+# session's *future* turns cheap on the same node).
+AFFINITY_BOUNDS_LO = np.array([0.3, 0.0, 0.0], np.float32)
+AFFINITY_BOUNDS_HI = np.array([1.1, 20.0, 4.0], np.float32)
+AFFINITY_DEFAULTS = np.array([0.9, 3.0, 1.0], np.float32)
+
+# cached prompt tokens bill at this fraction of the full input price
+# (Anthropic/OpenAI-style cached-input discount; vLLM skips the compute)
+CACHED_TOKEN_PRICE_FACTOR = 0.1
+
+
+def decide_pair_affinity_jnp(genome: jnp.ndarray, *,
+                             ttft_deadline: jnp.ndarray,
+                             tpot_deadline: jnp.ndarray, up: jnp.ndarray,
+                             prefill: jnp.ndarray, tpot: jnp.ndarray,
+                             cost: jnp.ndarray, prompt_cost: jnp.ndarray,
+                             hit_frac: jnp.ndarray, queue_len: jnp.ndarray,
+                             arrays: ClusterArrays) -> jnp.ndarray:
+    """SLO decision with a cache-hit-probability term: the expected
+    cached-prefix fraction (``hit_frac``, per pair) discounts both the
+    prefill term of the TTFT estimate and the prompt part of the cost, and
+    ``ρ`` adds an affinity bonus for pairs already holding the prefix.
+    ``prompt_cost`` is the request's (n_pairs,) prompt-only cost row.
+    """
+    gamma, kappa, rho = genome[0], genome[1], genome[2]
+    load = queue_len.astype(jnp.float32) / arrays.node_conc.astype(jnp.float32)
+    est_wait = kappa * load[arrays.pair_node]
+    prefill_eff = prefill * (1.0 - hit_frac)
+    est_ttft = up + est_wait + prefill_eff
+    cost_eff = cost - hit_frac * (1.0 - CACHED_TOKEN_PRICE_FACTOR) * prompt_cost
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= jnp.minimum(gamma, 1.0) * tpot_deadline)
+    score = cost_eff - rho * hit_frac * prompt_cost
+    any_ok = jnp.any(feasible)
+    best = jnp.argmin(jnp.where(feasible, score, jnp.inf))
+    overshoot = jnp.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    least_bad = jnp.argmin(overshoot)
+    return jnp.where(any_ok, best, least_bad).astype(jnp.int32)
+
+
+def decide_pair_affinity_py(genome: Sequence[float], *, ttft_deadline: float,
+                            tpot_deadline: float, up: np.ndarray,
+                            prefill: np.ndarray, tpot: np.ndarray,
+                            cost: np.ndarray, prompt_cost: np.ndarray,
+                            hit_frac: np.ndarray, queue_len: Sequence[int],
+                            arrays: ClusterArrays) -> int:
+    """Reference numpy transcription of the affinity decision (test oracle);
+    mirrors the jnp path op-for-op so argmin tie-breaking is identical."""
+    g = np.asarray(genome, np.float32)
+    gamma, kappa, rho = np.float32(g[0]), np.float32(g[1]), np.float32(g[2])
+    node = np.asarray(arrays.pair_node)
+    conc = np.asarray(arrays.node_conc)
+    up = np.asarray(up, np.float32)
+    prefill = np.asarray(prefill, np.float32)
+    tpot = np.asarray(tpot, np.float32)
+    cost = np.asarray(cost, np.float32)
+    prompt_cost = np.asarray(prompt_cost, np.float32)
+    hit_frac = np.asarray(hit_frac, np.float32)
+    ttft_deadline = np.float32(ttft_deadline)
+    tpot_deadline = np.float32(tpot_deadline)
+
+    load = np.asarray(queue_len).astype(np.float32) / conc.astype(np.float32)
+    est_wait = kappa * load[node]
+    prefill_eff = prefill * (np.float32(1.0) - hit_frac)
+    est_ttft = up + est_wait + prefill_eff
+    cost_eff = cost - hit_frac * np.float32(
+        1.0 - CACHED_TOKEN_PRICE_FACTOR) * prompt_cost
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= np.minimum(gamma, np.float32(1.0)) * tpot_deadline)
+    score = cost_eff - rho * hit_frac * prompt_cost
+    if feasible.any():
+        return int(np.argmin(np.where(feasible, score, np.inf)))
+    overshoot = np.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    return int(np.argmin(overshoot))
+
+
+class AffinityPolicy(RoutingPolicy):
+    """Registered wrapper over the cache-affinity decision pair."""
+
+    name = "affinity"
+    genome_spec = GenomeSpec(names=AFFINITY_PARAM_NAMES,
+                             lo=AFFINITY_BOUNDS_LO, hi=AFFINITY_BOUNDS_HI,
+                             defaults=AFFINITY_DEFAULTS)
+    requires = frozenset({"estimates", "deadlines", "cache"})
+
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        return decide_pair_affinity_jnp(
+            genome, ttft_deadline=inp.ttft_deadline,
+            tpot_deadline=inp.tpot_deadline, up=inp.up, prefill=inp.prefill,
+            tpot=inp.tpot, cost=inp.cost, prompt_cost=inp.prompt_cost,
+            hit_frac=inp.hit_frac, queue_len=inp.queue_len, arrays=arrays)
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        return decide_pair_affinity_py(
+            genome, ttft_deadline=float(inp.ttft_deadline),
+            tpot_deadline=float(inp.tpot_deadline), up=inp.up,
+            prefill=inp.prefill, tpot=inp.tpot, cost=inp.cost,
+            prompt_cost=inp.prompt_cost, hit_frac=inp.hit_frac,
+            queue_len=inp.queue_len, arrays=arrays)
+
+
+register_policy(AffinityPolicy())

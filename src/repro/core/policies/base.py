@@ -1,0 +1,150 @@
+"""RoutingPolicy API: the unit of extension for routing decision rules.
+
+The paper's contribution is a *family* of routing policies tuned by NSGA-II;
+this module defines the contract one policy must satisfy to plug into every
+consumer at once — the JAX trace evaluator (``core.fitness._run_trace``),
+both discrete-event oracles (``cluster.simulator``), the runtime router
+(``core.router.RequestRouter``, including its rolling-horizon re-fit) and
+the NSGA-II genome configuration (``core.nsga2.NSGA2Config.from_policy``).
+
+A policy owns:
+
+* ``name`` — the registry key. Every consumer dispatches on this string,
+  and the JAX evaluator jits with the name as a **static** argument, so one
+  policy identity compiles exactly one ``_run_trace`` executable (the
+  compile-once guarantee of the bucketed evaluator extends to new policies
+  for free).
+* ``genome_spec`` — length, bounds, defaults, and the discrete/per-request
+  flags of the decision-variable vector NSGA-II searches. NSGA2Config
+  derives its genome encoding from this, so genome-length defaults cannot
+  drift between the optimizer and the decision rule.
+* ``requires`` — which inputs the decision actually reads (see
+  :data:`REQUIREMENTS`). The runtime router uses this to skip computing
+  per-pair estimates / cache state / deadlines for policies that never look
+  at them (the hot path stays microseconds for Algorithm-2 thresholds).
+* ``decide_jnp`` / ``decide_py`` — twin implementations of the decision.
+  ``decide_jnp`` must be scan-traceable (pure jnp, no Python branching on
+  traced values); ``decide_py`` is an independent numpy transcription used
+  as the test oracle and by the runtime router / DES simulators. The two
+  must mirror each other **op-for-op in float32** so argmin tie-breaking is
+  identical — the registry-wide equivalence property test
+  (tests/test_policies.py) enforces this for every registered policy.
+* optional per-policy scan state (``state_size`` > 0 with
+  ``update_jnp``/``update_py``): a small float32 vector threaded through
+  the evaluation in dispatch order (e.g. the budget policy's per-window
+  spend ledger). Stateless policies leave the default no-op hooks.
+
+Decision inputs are normalized into :class:`PolicyInputs` — one NamedTuple
+carrying every feature any policy may consume, built identically by the JAX
+scan body, the DES oracles, and the runtime router. Fields a policy does not
+declare in ``requires`` may be zero-filled by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+#: Requirement flags a policy may declare. "features" = classifier outputs
+#: (complexity / category / confidence); "estimates" = per-pair phase/cost
+#: estimate rows (up, prefill, tpot, cost, prompt_cost); "deadlines" = the
+#: request's (TTFT, TPOT) QoE contract; "cache" = per-pair expected
+#: cached-prefix fractions from the prefix-cache state.
+REQUIREMENTS = ("features", "estimates", "deadlines", "cache")
+
+
+class PolicyInputs(NamedTuple):
+    """Uniform decision context for one request.
+
+    Scalars are 0-d (float32/int32); vectors are per-pair ``(n_pairs,)``
+    except ``queue_len`` which is per-node ``(n_nodes,)``. The same tuple is
+    built from jnp arrays inside the evaluator scan and from numpy arrays by
+    the DES oracles / runtime router.
+    """
+
+    index: np.ndarray          # int32 request index (monotone at runtime)
+    now: np.ndarray            # float32 arrival / decision timestamp
+    # classifier features
+    complexity: np.ndarray     # float32 c_i
+    pred_category: np.ndarray  # int32 (0=code, 1=math, 2=general)
+    pred_conf: np.ndarray      # float32
+    # QoE contract (+inf when the request carries no SLOs)
+    ttft_deadline: np.ndarray  # float32 seconds
+    tpot_deadline: np.ndarray  # float32 s/token
+    prompt_tokens: np.ndarray  # float32
+    # per-pair estimate rows (the request's row of the precomputed tables)
+    up: np.ndarray             # (n_pairs,) upload seconds
+    prefill: np.ndarray        # (n_pairs,) prefill seconds
+    tpot: np.ndarray           # (n_pairs,) decode seconds per output token
+    cost: np.ndarray           # (n_pairs,) full-request $ cost
+    prompt_cost: np.ndarray    # (n_pairs,) prompt-only $ cost
+    hit_frac: np.ndarray       # (n_pairs,) expected cached-prefix fraction
+    # live cluster state
+    queue_len: np.ndarray      # (n_nodes,) busy execution slots
+
+
+@dataclasses.dataclass(frozen=True)
+class GenomeSpec:
+    """Shape/bounds contract of a policy's decision-variable vector.
+
+    ``per_request=True`` marks genomes with one gene per trace request
+    (the direct-assignment encoding): their length is trace-dependent
+    (``length`` is -1) and they cannot drive the runtime router.
+    """
+
+    names: Tuple[str, ...] = ()
+    lo: Optional[np.ndarray] = None       # (D,) float32 search bounds
+    hi: Optional[np.ndarray] = None
+    defaults: Optional[np.ndarray] = None  # (D,) sensible hand defaults
+    discrete: bool = False
+    per_request: bool = False
+
+    def __post_init__(self):
+        if not self.per_request:
+            assert self.lo is not None and self.hi is not None, \
+                "fixed-length genomes need search bounds"
+            assert len(self.lo) == len(self.hi) == len(self.names)
+            if self.defaults is not None:
+                assert len(self.defaults) == len(self.names)
+
+    @property
+    def length(self) -> int:
+        """Genome dimensionality D; -1 when per-request (trace-dependent)."""
+        return -1 if self.per_request else len(self.names)
+
+
+class RoutingPolicy:
+    """Base class; subclasses override the class attributes + decide twins.
+
+    ``decide_*`` receive ``(genome, inp, arrays, state)`` and return a pair
+    index; ``update_*`` receive ``(genome, state, inp, pair, cost)`` — the
+    realized (cache-discounted) cost of the dispatched request — and return
+    the next state vector. Default hooks are stateless no-ops.
+    """
+
+    name: str = ""
+    genome_spec: GenomeSpec = GenomeSpec(per_request=True)
+    requires: frozenset = frozenset()
+    state_size: int = 0
+
+    # -- decisions -----------------------------------------------------------
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        raise NotImplementedError
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        raise NotImplementedError
+
+    # -- optional per-policy scan state --------------------------------------
+    def init_state(self) -> np.ndarray:
+        return np.zeros((self.state_size,), np.float32)
+
+    def update_jnp(self, genome, state, inp: PolicyInputs, pair, cost):
+        return state
+
+    def update_py(self, genome, state, inp: PolicyInputs, pair: int,
+                  cost: float) -> np.ndarray:
+        return state
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<RoutingPolicy {self.name!r} D={self.genome_spec.length}>"

@@ -1,0 +1,136 @@
+"""Budget-capped routing: hard per-window cost cap with cheapest-feasible
+fallback (new policy, written *only* against the RoutingPolicy registry).
+
+Production routers run under spend governance: a tenant's traffic must not
+exceed a dollar budget per accounting window no matter what the deadline
+structure wants. This policy keeps a per-window spend ledger in its scan
+state and routes in three tiers:
+
+1. while the window has budget, behave like the SLO policy *restricted to
+   pairs the remaining budget can still afford* (cheapest deadline-feasible
+   affordable pair);
+2. if no affordable pair is deadline-feasible, sacrifice latency: cheapest
+   affordable pair;
+3. if the ledger is exhausted (nothing affordable), hard-cap mode: the
+   globally cheapest pair — the request is served (no admission drop in
+   this model) but at minimum marginal spend.
+
+The ledger is the policy's per-policy scan state ``[window_id, spent]``
+(see ``RoutingPolicy.state_size``), threaded through the JAX evaluator's
+scan carry, both DES oracles, and the runtime router identically. Spend is
+billed at **list price from the shared float32 cost table** (not the
+realized cache-discounted cost): the three implementations then accumulate
+bit-identical float32 ledgers, so routing decisions — which compare
+``cost <= remaining`` — can never diverge between the scan-traced and
+discrete-event executions (the cache-discounted realized cost mixes f32/f64
+arithmetic across oracles).
+
+Genome: [B (window budget, $), γ (deadline headroom), κ (wait s/load)].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import register_policy
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy
+
+BUDGET_PARAM_NAMES = ("window_budget", "gamma", "kappa")
+BUDGET_BOUNDS_LO = np.array([0.001, 0.3, 0.0], np.float32)
+BUDGET_BOUNDS_HI = np.array([0.05, 1.1, 20.0], np.float32)
+BUDGET_DEFAULTS = np.array([0.01, 0.9, 3.0], np.float32)
+
+#: Accounting window length in trace seconds. The runtime router defaults
+#: ``now`` to its request counter (a window is then WINDOW_S consecutive
+#: requests); callers that re-fit this policy on recorded arrival
+#: timestamps (``RequestRouter.record(..., now=)``) must pass the same
+#: clock to ``route(now=)`` so the tuned budget B is applied on the time
+#: base it was optimized for.
+WINDOW_S = 30.0
+
+
+class BudgetPolicy(RoutingPolicy):
+    name = "budget"
+    genome_spec = GenomeSpec(names=BUDGET_PARAM_NAMES, lo=BUDGET_BOUNDS_LO,
+                             hi=BUDGET_BOUNDS_HI, defaults=BUDGET_DEFAULTS)
+    requires = frozenset({"estimates", "deadlines"})
+    state_size = 2                      # [window_id, spent_this_window]
+
+    def init_state(self) -> np.ndarray:
+        return np.array([-1.0, 0.0], np.float32)
+
+    # -- shared window arithmetic (float32 in both twins) ---------------------
+    @staticmethod
+    def _window_spent_jnp(state, now):
+        w = jnp.floor(now / jnp.float32(WINDOW_S))
+        spent = jnp.where(w == state[0], state[1], 0.0)
+        return w, spent
+
+    @staticmethod
+    def _window_spent_py(state, now):
+        w = np.float32(np.floor(np.float32(now) / np.float32(WINDOW_S)))
+        spent = state[1] if w == state[0] else np.float32(0.0)
+        return w, np.float32(spent)
+
+    # -- decisions ------------------------------------------------------------
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        B, gamma, kappa = genome[0], genome[1], genome[2]
+        _, spent = self._window_spent_jnp(state, inp.now)
+        remaining = jnp.maximum(B - spent, 0.0)
+
+        load = (inp.queue_len.astype(jnp.float32)
+                / arrays.node_conc.astype(jnp.float32))
+        est_ttft = inp.up + kappa * load[arrays.pair_node] + inp.prefill
+        feas_dl = (est_ttft <= gamma * inp.ttft_deadline) & \
+                  (inp.tpot <= jnp.minimum(gamma, 1.0) * inp.tpot_deadline)
+        affordable = inp.cost <= remaining
+        feas = feas_dl & affordable
+
+        cheapest_feas = jnp.argmin(jnp.where(feas, inp.cost, jnp.inf))
+        cheapest_afford = jnp.argmin(jnp.where(affordable, inp.cost, jnp.inf))
+        cheapest = jnp.argmin(inp.cost)
+        pair = jnp.where(jnp.any(feas), cheapest_feas,
+                         jnp.where(jnp.any(affordable), cheapest_afford,
+                                   cheapest))
+        return pair.astype(jnp.int32)
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        g = np.asarray(genome, np.float32)
+        B, gamma, kappa = np.float32(g[0]), np.float32(g[1]), np.float32(g[2])
+        _, spent = self._window_spent_py(state, inp.now)
+        remaining = np.maximum(B - spent, np.float32(0.0))
+
+        up = np.asarray(inp.up, np.float32)
+        prefill = np.asarray(inp.prefill, np.float32)
+        tpot = np.asarray(inp.tpot, np.float32)
+        cost = np.asarray(inp.cost, np.float32)
+        node = np.asarray(arrays.pair_node)
+        conc = np.asarray(arrays.node_conc)
+        load = np.asarray(inp.queue_len).astype(np.float32) / \
+            conc.astype(np.float32)
+        est_ttft = up + kappa * load[node] + prefill
+        feas_dl = (est_ttft <= gamma * np.float32(inp.ttft_deadline)) & \
+                  (tpot <= np.minimum(gamma, np.float32(1.0))
+                   * np.float32(inp.tpot_deadline))
+        affordable = cost <= remaining
+        feas = feas_dl & affordable
+        if feas.any():
+            return int(np.argmin(np.where(feas, cost, np.inf)))
+        if affordable.any():
+            return int(np.argmin(np.where(affordable, cost, np.inf)))
+        return int(np.argmin(cost))
+
+    # -- ledger updates -------------------------------------------------------
+    def update_jnp(self, genome, state, inp: PolicyInputs, pair, cost):
+        # bill at list price from the shared f32 table (see module docstring)
+        w, spent = self._window_spent_jnp(state, inp.now)
+        return jnp.stack([w, spent + inp.cost[pair]])
+
+    def update_py(self, genome, state, inp: PolicyInputs, pair: int,
+                  cost: float) -> np.ndarray:
+        w, spent = self._window_spent_py(state, inp.now)
+        billed = np.float32(np.asarray(inp.cost, np.float32)[pair])
+        return np.array([w, spent + billed], np.float32)
+
+
+register_policy(BudgetPolicy())

@@ -1,0 +1,28 @@
+"""Direct-assignment policy (paper §IV-B.1): one integer gene per request.
+
+The genome *is* the routing solution — gene i selects request i's
+(node, model) pair. This is the discrete NSGA-II encoding (uniform-swap
+crossover + reassignment mutation); it has no runtime-router form because
+the genome length is trace-dependent (``GenomeSpec.per_request``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import register_policy
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy
+
+
+class DirectPolicy(RoutingPolicy):
+    name = "direct"
+    genome_spec = GenomeSpec(discrete=True, per_request=True)
+    requires = frozenset()
+
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        return genome[inp.index].astype(jnp.int32)
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        return int(genome[int(inp.index)])
+
+
+register_policy(DirectPolicy())

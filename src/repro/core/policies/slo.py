@@ -1,0 +1,123 @@
+"""SLO-aware decision policy (QoE extension of the paper's router).
+
+Instead of difficulty thresholds it estimates each pair's TTFT (upload +
+predicted queue wait + prefill) and TPOT against the request's phase
+deadlines and picks the *cheapest feasible* pair — deadline-tight requests
+therefore land on low-queue/cloud pairs while relaxed ones ride cheap edge
+pairs. Its genome is
+
+    [γ (deadline headroom, <1 = conservative), κ (est. wait s per unit load)]
+
+searchable by the same NSGA-II via ``TraceEvaluator.make_fitness("slo")``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...cluster.spec import ClusterArrays
+from . import register_policy
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy
+
+SLO_PARAM_NAMES = ("gamma", "kappa")
+
+# γ in [0.3, 1.1] (fraction of the deadline budget the estimate may use),
+# κ in [0, 20] s of predicted wait at full load.
+SLO_BOUNDS_LO = np.array([0.3, 0.0], np.float32)
+SLO_BOUNDS_HI = np.array([1.1, 20.0], np.float32)
+
+# sensible hand defaults: 10% headroom, ~3 s wait at a saturated node
+SLO_DEFAULTS = np.array([0.9, 3.0], np.float32)
+
+
+def _slo_scores_np(genome, ttft_deadline, tpot_deadline, up, prefill, tpot,
+                   queue_len, node, conc):
+    """Shared float32 arithmetic for the numpy oracle (mirrors the jnp path
+    op-for-op so argmin tie-breaking is identical)."""
+    gamma = np.float32(genome[0])
+    kappa = np.float32(genome[1])
+    load = queue_len.astype(np.float32) / conc.astype(np.float32)
+    est_wait = kappa * load[node]
+    est_ttft = up + est_wait + prefill
+    # γ headroom hedges the *uncertain* TTFT estimate; TPOT is a known
+    # constant per pair, so γ > 1 must not admit guaranteed TPOT misses
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= np.minimum(gamma, np.float32(1.0)) * tpot_deadline)
+    overshoot = np.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    return feasible, est_ttft, overshoot
+
+
+def decide_pair_slo_jnp(genome: jnp.ndarray, *, ttft_deadline: jnp.ndarray,
+                        tpot_deadline: jnp.ndarray, up: jnp.ndarray,
+                        prefill: jnp.ndarray, tpot: jnp.ndarray,
+                        cost: jnp.ndarray, queue_len: jnp.ndarray,
+                        arrays: ClusterArrays) -> jnp.ndarray:
+    """SLO-aware routing: cheapest pair whose estimated phase times fit the
+    deadline budget scaled by γ; if no pair is feasible, minimize the worst
+    normalized deadline overshoot (degrades gracefully toward fast pairs).
+
+    ``up``/``prefill``/``cost`` are this request's (n_pairs,) rows of the
+    precomputed tables; ``tpot`` is the per-pair decode time (n_pairs,);
+    ``queue_len`` is the (n_nodes,) busy-slot view from the monitor.
+    """
+    gamma = genome[0]
+    kappa = genome[1]
+    load = queue_len.astype(jnp.float32) / arrays.node_conc.astype(jnp.float32)
+    est_wait = kappa * load[arrays.pair_node]
+    est_ttft = up + est_wait + prefill
+    # γ headroom applies to the uncertain TTFT estimate only; the TPOT term
+    # clamps γ at 1 so a searchable γ > 1 cannot admit certain TPOT misses
+    feasible = (est_ttft <= gamma * ttft_deadline) & \
+               (tpot <= jnp.minimum(gamma, 1.0) * tpot_deadline)
+    any_ok = jnp.any(feasible)
+    cheapest = jnp.argmin(jnp.where(feasible, cost, jnp.inf))
+    overshoot = jnp.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
+    least_bad = jnp.argmin(overshoot)
+    return jnp.where(any_ok, cheapest, least_bad).astype(jnp.int32)
+
+
+def decide_pair_slo_py(genome: Sequence[float], *, ttft_deadline: float,
+                       tpot_deadline: float, up: np.ndarray,
+                       prefill: np.ndarray, tpot: np.ndarray,
+                       cost: np.ndarray, queue_len: Sequence[int],
+                       arrays: ClusterArrays) -> int:
+    """Reference numpy transcription of the SLO decision (test oracle)."""
+    node = np.asarray(arrays.pair_node)
+    conc = np.asarray(arrays.node_conc)
+    feasible, est_ttft, overshoot = _slo_scores_np(
+        np.asarray(genome, np.float32),
+        np.float32(ttft_deadline), np.float32(tpot_deadline),
+        np.asarray(up, np.float32), np.asarray(prefill, np.float32),
+        np.asarray(tpot, np.float32), np.asarray(queue_len), node, conc)
+    if feasible.any():
+        return int(np.argmin(np.where(feasible, np.asarray(cost, np.float32),
+                                      np.inf)))
+    return int(np.argmin(overshoot))
+
+
+class SLOPolicy(RoutingPolicy):
+    """Registered wrapper over the SLO decision pair."""
+
+    name = "slo"
+    genome_spec = GenomeSpec(names=SLO_PARAM_NAMES, lo=SLO_BOUNDS_LO,
+                             hi=SLO_BOUNDS_HI, defaults=SLO_DEFAULTS)
+    requires = frozenset({"estimates", "deadlines"})
+
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        return decide_pair_slo_jnp(genome, ttft_deadline=inp.ttft_deadline,
+                                   tpot_deadline=inp.tpot_deadline, up=inp.up,
+                                   prefill=inp.prefill, tpot=inp.tpot,
+                                   cost=inp.cost, queue_len=inp.queue_len,
+                                   arrays=arrays)
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        return decide_pair_slo_py(genome, ttft_deadline=float(inp.ttft_deadline),
+                                  tpot_deadline=float(inp.tpot_deadline),
+                                  up=inp.up, prefill=inp.prefill,
+                                  tpot=inp.tpot, cost=inp.cost,
+                                  queue_len=inp.queue_len, arrays=arrays)
+
+
+register_policy(SLOPolicy())

@@ -1,302 +1,36 @@
-"""Threshold routing policy — paper Algorithm 2 ("Runtime LLM Request
-Routing") plus the threshold genome the NSGA-II optimizes (§IV-B.6).
+"""Back-compat shim: the policy implementations live in ``core.policies``.
 
-Genome layout (6 decision variables, all continuous):
-
-    [θ_d_code, θ_d_math, θ_d_general, θ_q, θ_t_code, θ_t_math]
-
-``decide_pair_jnp`` is the jit-friendly decoder used inside the fitness scan
-and by the serving scheduler; ``decide_pair_py`` is a line-by-line Python
-transcription of Algorithm 2 used as the test oracle.
-
-Beyond Algorithm 2, this module hosts the **SLO-aware decision mode**
-(``decide_pair_slo_jnp`` / ``decide_pair_slo_py``): instead of difficulty
-thresholds it estimates each pair's TTFT (upload + predicted queue wait +
-prefill) and TPOT against the request's phase deadlines and picks the
-*cheapest feasible* pair — deadline-tight requests therefore land on
-low-queue/cloud pairs while relaxed ones ride cheap edge pairs. Its genome is
-
-    [γ (deadline headroom, <1 = conservative), κ (est. wait s per unit load)]
-
-searchable by the same NSGA-II via ``TraceEvaluator.make_fitness("slo")``.
-
-Category encoding follows workload.classifier.CATEGORIES:
-0 = 'code', 1 = 'math', 2 = 'general'. Model types follow
-cluster.spec.MODEL_TYPES: 0 = 'instruct', 1 = 'coder', 2 = 'math',
-3 = 'general'.
+Historically this module held the threshold / SLO / cache-affinity decision
+functions and their genome constants; they are now one registered
+:class:`~repro.core.policies.base.RoutingPolicy` module each under
+``repro/core/policies/`` (the unit of extension — see the registry package
+docstring and docs/architecture.md "Policy registry & extension guide").
+Every public name keeps importing from here so existing call sites and the
+oracle tests stay valid.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from .policies.affinity import (AFFINITY_BOUNDS_HI, AFFINITY_BOUNDS_LO,
+                                AFFINITY_DEFAULTS, AFFINITY_PARAM_NAMES,
+                                CACHED_TOKEN_PRICE_FACTOR,
+                                decide_pair_affinity_jnp,
+                                decide_pair_affinity_py)
+from .policies.slo import (SLO_BOUNDS_HI, SLO_BOUNDS_LO, SLO_DEFAULTS,
+                           SLO_PARAM_NAMES, _slo_scores_np,
+                           decide_pair_slo_jnp, decide_pair_slo_py)
+from .policies.threshold import (BOUNDS_HI, BOUNDS_LO, CAT_CODE, CAT_GENERAL,
+                                 CAT_MATH, PAPER_DEFAULTS, THRESHOLD_NAMES,
+                                 TYPE_CODER, TYPE_INSTRUCT, TYPE_MATH,
+                                 Thresholds, decide_pair_jnp, decide_pair_py)
 
-import jax.numpy as jnp
-import numpy as np
-
-from ..cluster.spec import ClusterArrays
-
-THRESHOLD_NAMES = ("theta_d_code", "theta_d_math", "theta_d_general",
-                   "theta_q", "theta_t_code", "theta_t_math")
-
-# search bounds for NSGA-II (θ_d in [0,1], θ_q in [0, 16] requests,
-# θ_t in [0.34, 1] — below 1/3 the classifier confidence gate is vacuous)
-BOUNDS_LO = np.array([0.0, 0.0, 0.0, 0.0, 0.34, 0.34], np.float32)
-BOUNDS_HI = np.array([1.0, 1.0, 1.0, 16.0, 1.0, 1.0], np.float32)
-
-# paper's illustrative defaults (θ_d,general = 0.5, θ_q = 5, θ_t = 0.7)
-PAPER_DEFAULTS = np.array([0.5, 0.5, 0.5, 5.0, 0.7, 0.7], np.float32)
-
-CAT_CODE, CAT_MATH, CAT_GENERAL = 0, 1, 2
-TYPE_INSTRUCT, TYPE_CODER, TYPE_MATH = 0, 1, 2
-
-
-class Thresholds(NamedTuple):
-    d_code: jnp.ndarray
-    d_math: jnp.ndarray
-    d_general: jnp.ndarray
-    q: jnp.ndarray
-    t_code: jnp.ndarray
-    t_math: jnp.ndarray
-
-    @classmethod
-    def from_genome(cls, g) -> "Thresholds":
-        return cls(*(g[i] for i in range(6)))
-
-
-def decide_pair_jnp(genome: jnp.ndarray, *, complexity: jnp.ndarray,
-                    pred_category: jnp.ndarray, pred_conf: jnp.ndarray,
-                    queue_len: jnp.ndarray, arrays: ClusterArrays
-                    ) -> jnp.ndarray:
-    """Algorithm 2, fully vectorizable. Returns a pair index (int32 scalar).
-
-    Lines reference the paper's pseudo-code:
-      5-13: go_edge from per-category difficulty thresholds
-      15-17: filter edge nodes by queue (θ_q); none -> cloud fallback
-      19-25: model type from classifier confidence gates (θ_t)
-      26: first edge node (by node order) hosting the matching model whose
-          queue passes; if the chosen type is unavailable on passing nodes,
-          fall back to cloud (conservative reading of line 17).
-    """
-    th = Thresholds.from_genome(genome)
-    is_code = pred_category == CAT_CODE
-    is_math = pred_category == CAT_MATH
-
-    # Algorithm 2 lines 5-13: note the elif-chain semantics — a code/math
-    # request that fails its own threshold still falls through to the
-    # general-threshold check (line 9).
-    go_edge = ((is_code & (complexity < th.d_code))
-               | (is_math & (complexity < th.d_math))
-               | (complexity < th.d_general))
-
-    sel_type = jnp.where(is_code & (pred_conf >= th.t_code), TYPE_CODER,
-                         jnp.where(is_math & (pred_conf >= th.t_math),
-                                   TYPE_MATH, TYPE_INSTRUCT))
-
-    # candidate pairs of the selected type, ordered by node index (-1 pad)
-    cand = arrays.edge_pairs_by_type[sel_type]          # (n_edge,)
-    cand_valid = cand >= 0
-    cand_node = arrays.pair_node[jnp.maximum(cand, 0)]
-    cand_q_ok = queue_len[cand_node] <= th.q
-    ok = cand_valid & cand_q_ok
-    any_ok = jnp.any(ok)
-    first = jnp.argmax(ok)                              # first True
-    edge_pair = jnp.where(any_ok, cand[first], arrays.cloud_fallback_pair)
-
-    return jnp.where(go_edge, edge_pair,
-                     arrays.cloud_fallback_pair).astype(jnp.int32)
-
-
-def decide_pair_py(genome: Sequence[float], *, complexity: float,
-                   pred_category: int, pred_conf: float,
-                   queue_len: Sequence[int], arrays: ClusterArrays) -> int:
-    """Reference transcription of Algorithm 2 (test oracle)."""
-    (d_code, d_math, d_general, th_q, t_code, t_math) = [float(x) for x in genome]
-    pair_node = np.asarray(arrays.pair_node)
-    edge_by_type = np.asarray(arrays.edge_pairs_by_type)
-    fallback = int(arrays.cloud_fallback_pair)
-
-    if pred_category == CAT_CODE and complexity < d_code:
-        go_edge = True
-    elif pred_category == CAT_MATH and complexity < d_math:
-        go_edge = True
-    elif complexity < d_general:
-        go_edge = True
-    else:
-        go_edge = False
-
-    if not go_edge:
-        return fallback
-
-    if pred_category == CAT_CODE and pred_conf >= t_code:
-        sel_type = TYPE_CODER
-    elif pred_category == CAT_MATH and pred_conf >= t_math:
-        sel_type = TYPE_MATH
-    else:
-        sel_type = TYPE_INSTRUCT
-
-    for pair in edge_by_type[sel_type]:
-        if pair < 0:
-            continue
-        if queue_len[pair_node[pair]] <= th_q:
-            return int(pair)
-    return fallback
-
-
-# ---------------------------------------------------------------------------
-# SLO-aware decision mode (QoE extension)
-# ---------------------------------------------------------------------------
-SLO_PARAM_NAMES = ("gamma", "kappa")
-
-# γ in [0.3, 1.1] (fraction of the deadline budget the estimate may use),
-# κ in [0, 20] s of predicted wait at full load.
-SLO_BOUNDS_LO = np.array([0.3, 0.0], np.float32)
-SLO_BOUNDS_HI = np.array([1.1, 20.0], np.float32)
-
-# sensible hand defaults: 10% headroom, ~3 s wait at a saturated node
-SLO_DEFAULTS = np.array([0.9, 3.0], np.float32)
-
-
-def _slo_scores_np(genome, ttft_deadline, tpot_deadline, up, prefill, tpot,
-                   queue_len, node, conc):
-    """Shared float32 arithmetic for the numpy oracle (mirrors the jnp path
-    op-for-op so argmin tie-breaking is identical)."""
-    gamma = np.float32(genome[0])
-    kappa = np.float32(genome[1])
-    load = queue_len.astype(np.float32) / conc.astype(np.float32)
-    est_wait = kappa * load[node]
-    est_ttft = up + est_wait + prefill
-    # γ headroom hedges the *uncertain* TTFT estimate; TPOT is a known
-    # constant per pair, so γ > 1 must not admit guaranteed TPOT misses
-    feasible = (est_ttft <= gamma * ttft_deadline) & \
-               (tpot <= np.minimum(gamma, np.float32(1.0)) * tpot_deadline)
-    overshoot = np.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
-    return feasible, est_ttft, overshoot
-
-
-def decide_pair_slo_jnp(genome: jnp.ndarray, *, ttft_deadline: jnp.ndarray,
-                        tpot_deadline: jnp.ndarray, up: jnp.ndarray,
-                        prefill: jnp.ndarray, tpot: jnp.ndarray,
-                        cost: jnp.ndarray, queue_len: jnp.ndarray,
-                        arrays: ClusterArrays) -> jnp.ndarray:
-    """SLO-aware routing: cheapest pair whose estimated phase times fit the
-    deadline budget scaled by γ; if no pair is feasible, minimize the worst
-    normalized deadline overshoot (degrades gracefully toward fast pairs).
-
-    ``up``/``prefill``/``cost`` are this request's (n_pairs,) rows of the
-    precomputed tables; ``tpot`` is the per-pair decode time (n_pairs,);
-    ``queue_len`` is the (n_nodes,) busy-slot view from the monitor.
-    """
-    gamma = genome[0]
-    kappa = genome[1]
-    load = queue_len.astype(jnp.float32) / arrays.node_conc.astype(jnp.float32)
-    est_wait = kappa * load[arrays.pair_node]
-    est_ttft = up + est_wait + prefill
-    # γ headroom applies to the uncertain TTFT estimate only; the TPOT term
-    # clamps γ at 1 so a searchable γ > 1 cannot admit certain TPOT misses
-    feasible = (est_ttft <= gamma * ttft_deadline) & \
-               (tpot <= jnp.minimum(gamma, 1.0) * tpot_deadline)
-    any_ok = jnp.any(feasible)
-    cheapest = jnp.argmin(jnp.where(feasible, cost, jnp.inf))
-    overshoot = jnp.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
-    least_bad = jnp.argmin(overshoot)
-    return jnp.where(any_ok, cheapest, least_bad).astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# Cache-affinity decision mode (prefix-reuse extension)
-# ---------------------------------------------------------------------------
-AFFINITY_PARAM_NAMES = ("gamma", "kappa", "rho")
-
-# γ, κ as in the SLO genome; ρ in [0, 4] weighs expected prefix-cache hits
-# beyond their realized discount (stickiness: a hit now also keeps the
-# session's *future* turns cheap on the same node).
-AFFINITY_BOUNDS_LO = np.array([0.3, 0.0, 0.0], np.float32)
-AFFINITY_BOUNDS_HI = np.array([1.1, 20.0, 4.0], np.float32)
-AFFINITY_DEFAULTS = np.array([0.9, 3.0, 1.0], np.float32)
-
-# cached prompt tokens bill at this fraction of the full input price
-# (Anthropic/OpenAI-style cached-input discount; vLLM skips the compute)
-CACHED_TOKEN_PRICE_FACTOR = 0.1
-
-
-def decide_pair_affinity_jnp(genome: jnp.ndarray, *,
-                             ttft_deadline: jnp.ndarray,
-                             tpot_deadline: jnp.ndarray, up: jnp.ndarray,
-                             prefill: jnp.ndarray, tpot: jnp.ndarray,
-                             cost: jnp.ndarray, prompt_cost: jnp.ndarray,
-                             hit_frac: jnp.ndarray, queue_len: jnp.ndarray,
-                             arrays: ClusterArrays) -> jnp.ndarray:
-    """SLO decision with a cache-hit-probability term: the expected
-    cached-prefix fraction (``hit_frac``, per pair) discounts both the
-    prefill term of the TTFT estimate and the prompt part of the cost, and
-    ``ρ`` adds an affinity bonus for pairs already holding the prefix.
-    ``prompt_cost`` is the request's (n_pairs,) prompt-only cost row.
-    """
-    gamma, kappa, rho = genome[0], genome[1], genome[2]
-    load = queue_len.astype(jnp.float32) / arrays.node_conc.astype(jnp.float32)
-    est_wait = kappa * load[arrays.pair_node]
-    prefill_eff = prefill * (1.0 - hit_frac)
-    est_ttft = up + est_wait + prefill_eff
-    cost_eff = cost - hit_frac * (1.0 - CACHED_TOKEN_PRICE_FACTOR) * prompt_cost
-    feasible = (est_ttft <= gamma * ttft_deadline) & \
-               (tpot <= jnp.minimum(gamma, 1.0) * tpot_deadline)
-    score = cost_eff - rho * hit_frac * prompt_cost
-    any_ok = jnp.any(feasible)
-    best = jnp.argmin(jnp.where(feasible, score, jnp.inf))
-    overshoot = jnp.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
-    least_bad = jnp.argmin(overshoot)
-    return jnp.where(any_ok, best, least_bad).astype(jnp.int32)
-
-
-def decide_pair_affinity_py(genome: Sequence[float], *, ttft_deadline: float,
-                            tpot_deadline: float, up: np.ndarray,
-                            prefill: np.ndarray, tpot: np.ndarray,
-                            cost: np.ndarray, prompt_cost: np.ndarray,
-                            hit_frac: np.ndarray, queue_len: Sequence[int],
-                            arrays: ClusterArrays) -> int:
-    """Reference numpy transcription of the affinity decision (test oracle);
-    mirrors the jnp path op-for-op so argmin tie-breaking is identical."""
-    g = np.asarray(genome, np.float32)
-    gamma, kappa, rho = np.float32(g[0]), np.float32(g[1]), np.float32(g[2])
-    node = np.asarray(arrays.pair_node)
-    conc = np.asarray(arrays.node_conc)
-    up = np.asarray(up, np.float32)
-    prefill = np.asarray(prefill, np.float32)
-    tpot = np.asarray(tpot, np.float32)
-    cost = np.asarray(cost, np.float32)
-    prompt_cost = np.asarray(prompt_cost, np.float32)
-    hit_frac = np.asarray(hit_frac, np.float32)
-    ttft_deadline = np.float32(ttft_deadline)
-    tpot_deadline = np.float32(tpot_deadline)
-
-    load = np.asarray(queue_len).astype(np.float32) / conc.astype(np.float32)
-    est_wait = kappa * load[node]
-    prefill_eff = prefill * (np.float32(1.0) - hit_frac)
-    est_ttft = up + est_wait + prefill_eff
-    cost_eff = cost - hit_frac * np.float32(
-        1.0 - CACHED_TOKEN_PRICE_FACTOR) * prompt_cost
-    feasible = (est_ttft <= gamma * ttft_deadline) & \
-               (tpot <= np.minimum(gamma, np.float32(1.0)) * tpot_deadline)
-    score = cost_eff - rho * hit_frac * prompt_cost
-    if feasible.any():
-        return int(np.argmin(np.where(feasible, score, np.inf)))
-    overshoot = np.maximum(est_ttft / ttft_deadline, tpot / tpot_deadline)
-    return int(np.argmin(overshoot))
-
-
-def decide_pair_slo_py(genome: Sequence[float], *, ttft_deadline: float,
-                       tpot_deadline: float, up: np.ndarray,
-                       prefill: np.ndarray, tpot: np.ndarray,
-                       cost: np.ndarray, queue_len: Sequence[int],
-                       arrays: ClusterArrays) -> int:
-    """Reference numpy transcription of the SLO decision (test oracle)."""
-    node = np.asarray(arrays.pair_node)
-    conc = np.asarray(arrays.node_conc)
-    feasible, est_ttft, overshoot = _slo_scores_np(
-        np.asarray(genome, np.float32),
-        np.float32(ttft_deadline), np.float32(tpot_deadline),
-        np.asarray(up, np.float32), np.asarray(prefill, np.float32),
-        np.asarray(tpot, np.float32), np.asarray(queue_len), node, conc)
-    if feasible.any():
-        return int(np.argmin(np.where(feasible, np.asarray(cost, np.float32),
-                                      np.inf)))
-    return int(np.argmin(overshoot))
+__all__ = [
+    "THRESHOLD_NAMES", "BOUNDS_LO", "BOUNDS_HI", "PAPER_DEFAULTS",
+    "Thresholds", "decide_pair_jnp", "decide_pair_py",
+    "CAT_CODE", "CAT_MATH", "CAT_GENERAL",
+    "TYPE_INSTRUCT", "TYPE_CODER", "TYPE_MATH",
+    "SLO_PARAM_NAMES", "SLO_BOUNDS_LO", "SLO_BOUNDS_HI", "SLO_DEFAULTS",
+    "decide_pair_slo_jnp", "decide_pair_slo_py", "_slo_scores_np",
+    "AFFINITY_PARAM_NAMES", "AFFINITY_BOUNDS_LO", "AFFINITY_BOUNDS_HI",
+    "AFFINITY_DEFAULTS", "CACHED_TOKEN_PRICE_FACTOR",
+    "decide_pair_affinity_jnp", "decide_pair_affinity_py",
+]

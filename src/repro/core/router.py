@@ -1,10 +1,10 @@
 """Runtime request router (paper §IV-B.6, "Routing Policy Execution").
 
 Executes a policy π* selected from the NSGA-II Pareto set. The hot path is
-``route()``: feature lookup + Algorithm 2 threshold rules — microseconds per
-decision (the paper claims "millisecond-level routing decisions"; our
-benchmark measures it). Beyond the paper (its §VI future work), the router is
-fault-aware:
+``route()``: feature lookup + one registered policy decision — microseconds
+per call (the paper claims "millisecond-level routing decisions"; our
+benchmark measures it). Beyond the paper (its §VI future work), the router
+is fault-aware:
 
 * **failover** — unhealthy nodes are masked from the candidate set; if the
   chosen node is down the request falls back to the cloud pair, or any
@@ -27,25 +27,23 @@ fault-aware:
   after the first reuses cached executables (ms-scale instead of an XLA
   retrace per window).
 
-Three decision modes (``mode=``):
-
-* ``"threshold"`` — the paper's Algorithm 2 over difficulty/queue/confidence
-  thresholds;
-* ``"slo"`` — QoE-aware phase-split routing: estimates each pair's TTFT and
-  TPOT against the request's (per-category or explicit) deadlines and picks
-  the cheapest feasible pair (see ``core.policy.decide_pair_slo_py`` and
-  ``workload.slo``);
-* ``"affinity"`` — cache-affinity routing: the SLO decision with the
-  monitor's per-node prefix-cache state folded in — the expected
-  cached-prefix fraction discounts the prefill term of the TTFT estimate and
-  the cached prompt tokens' price, and ρ adds stickiness toward nodes
-  already holding the session's (or shared system prompt's) KV
-  (``core.policy.decide_pair_affinity_py``, ``serving.kvcache``).
+The decision rule itself is pluggable: ``mode=`` names any runtime-capable
+policy in the RoutingPolicy registry (``core.policies.runtime_policies()``
+— "threshold", "slo", "affinity", "p2c-hedge", "budget", ...). The router
+consults the policy's declared ``requires`` set to decide which inputs to
+assemble per request (per-pair phase/cost estimates, deadline contract,
+prefix-cache hit fractions), builds one ``PolicyInputs`` bundle, and calls
+``policy.decide_py``. Per-policy runtime state (e.g. the budget policy's
+spend ledger) is threaded through ``update_py`` after every decision.
+Unknown mode names raise ``ValueError`` listing the registered policies;
+the re-optimization loop derives its NSGA-II genome encoding from the same
+policy object (``NSGA2Config.from_policy``), so a newly registered policy
+drives the router — including re-fit — with zero edits here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,9 +56,8 @@ from ..workload.datasets import Request
 from ..workload.features import complexity_score
 from ..workload.slo import DEFAULT_SLO_TABLE, slo_arrays
 from .fitness import request_pair_estimates
-from .policy import (AFFINITY_DEFAULTS, SLO_DEFAULTS,
-                     decide_pair_affinity_py, decide_pair_py,
-                     decide_pair_slo_py)
+from .policies import (PolicyInputs, get_policy, list_policies,
+                       runtime_policies)
 
 
 @dataclasses.dataclass
@@ -89,23 +86,37 @@ class Observation:
 
 
 class RequestRouter:
-    def __init__(self, cluster: ClusterSpec, thresholds: Sequence[float],
+    def __init__(self, cluster: ClusterSpec, thresholds=None,
                  monitor: Optional[ClusterMonitor] = None,
                  hedge_factor: float = 3.0, mode: str = "threshold",
                  slo_params: Optional[Sequence[float]] = None,
                  slo_table=DEFAULT_SLO_TABLE,
                  affinity_params: Optional[Sequence[float]] = None,
-                 cache_block: int = 16):
-        assert mode in ("threshold", "slo", "affinity")
+                 cache_block: int = 16,
+                 params: Optional[Sequence[float]] = None):
+        self.policy = get_policy(mode)     # ValueError lists registry names
+        if self.policy.genome_spec.per_request:
+            raise ValueError(
+                f"policy {self.policy.name!r} has a per-request genome and "
+                f"cannot drive the runtime router; runtime-capable policies: "
+                f"{', '.join(runtime_policies())}")
         self.cluster = cluster
         self.arrays: ClusterArrays = cluster.to_arrays()
-        self.thresholds = np.asarray(thresholds, np.float32)
-        self.mode = mode
-        self.slo_params = np.asarray(
-            SLO_DEFAULTS if slo_params is None else slo_params, np.float32)
-        self.affinity_params = np.asarray(
-            AFFINITY_DEFAULTS if affinity_params is None else affinity_params,
-            np.float32)
+        # per-policy genome store, seeded from every registered policy's
+        # GenomeSpec defaults; explicit ctor args override their slot
+        self._params: Dict[str, np.ndarray] = {}
+        for name in list_policies():
+            spec = get_policy(name).genome_spec
+            if spec.defaults is not None:
+                self._params[name] = np.asarray(spec.defaults, np.float32)
+        if thresholds is not None:
+            self._params["threshold"] = np.asarray(thresholds, np.float32)
+        if slo_params is not None:
+            self._params["slo"] = np.asarray(slo_params, np.float32)
+        if affinity_params is not None:
+            self._params["affinity"] = np.asarray(affinity_params, np.float32)
+        if params is not None:
+            self._params[self.policy.name] = np.asarray(params, np.float32)
         self.cache_block = cache_block
         self._slo_ttft, self._slo_tpot = slo_arrays(slo_table)
         self.monitor = monitor or ClusterMonitor(len(cluster.nodes))
@@ -113,72 +124,125 @@ class RequestRouter:
         self._rng = np.random.default_rng(0)
         # numpy view of the pair table, converted once: the per-request hot
         # path must not pay device-to-host transfers on every decision
-        self._np_arrays = ClusterArrays(*(np.asarray(a) for a in self.arrays))
+        self._np_arrays = self.arrays.numpy()
         self._pair_node = self._np_arrays.pair_node
         self._pair_is_edge = self._np_arrays.pair_is_edge
+        self._n_pairs = len(self._pair_node)
+        self._pstate = self.policy.init_state()  # per-policy runtime state
         self._history: list = []        # Observation rolling window
         self._archive = None            # (P, D) genomes from the last re-opt
         self._n_recorded = 0            # monotone (history list is trimmed)
         self._last_reopt_at = 0         # _n_recorded at the last re-fit
+        self._n_routed = 0              # decision counter (PolicyInputs.index)
+
+    # -- params compatibility views ------------------------------------------
+    @property
+    def mode(self) -> str:
+        return self.policy.name
+
+    @property
+    def params(self) -> np.ndarray:
+        """Active policy's genome."""
+        return self._params[self.policy.name]
+
+    @params.setter
+    def params(self, value) -> None:
+        self._params[self.policy.name] = np.asarray(value, np.float32)
+
+    @property
+    def thresholds(self) -> np.ndarray:
+        return self._params["threshold"]
+
+    @thresholds.setter
+    def thresholds(self, value) -> None:
+        self._params["threshold"] = np.asarray(value, np.float32)
+
+    @property
+    def slo_params(self) -> np.ndarray:
+        return self._params["slo"]
+
+    @slo_params.setter
+    def slo_params(self, value) -> None:
+        self._params["slo"] = np.asarray(value, np.float32)
+
+    @property
+    def affinity_params(self) -> np.ndarray:
+        return self._params["affinity"]
+
+    @affinity_params.setter
+    def affinity_params(self, value) -> None:
+        self._params["affinity"] = np.asarray(value, np.float32)
 
     # -- hot path -------------------------------------------------------------
     def route(self, req: Request, want_backup: bool = False,
               ttft_deadline: Optional[float] = None,
-              tpot_deadline: Optional[float] = None) -> RouteDecision:
-        """Route one request. In ``slo`` mode explicit per-request deadlines
-        override the per-category SLO table defaults."""
+              tpot_deadline: Optional[float] = None,
+              now: Optional[float] = None) -> RouteDecision:
+        """Route one request through the active policy.
+
+        Explicit per-request deadlines override the per-category SLO table
+        defaults (consumed by policies declaring the "deadlines"
+        requirement). ``now`` is the decision timestamp for time-windowed
+        policies (e.g. the budget ledger); it defaults to the router's
+        request counter (pseudo-seconds: one window = WINDOW_S requests).
+        Callers driving a time-windowed policy under real/simulated
+        timestamps — in particular anyone also passing ``now=`` to
+        :meth:`record`, whose re-fit evaluates the genome against those
+        recorded trace-seconds — must pass the same clock here, or the
+        tuned window budget is applied on a different time base than the
+        one NSGA-II optimized it for."""
+        pol = self.policy
         pred_cat, conf = classify(req, self._rng)
         c_i = complexity_score(req, pred_cat)
         queue = self.monitor.queue_lengths()
         healthy = self.monitor.healthy_mask()
 
         # mask unhealthy nodes by making their queues look infinite
-        masked_queue = [q if healthy[j] else 10 ** 6
-                        for j, q in enumerate(queue)]
+        masked_queue = np.asarray(
+            [q if healthy[j] else 10 ** 6 for j, q in enumerate(queue)],
+            np.int64)
 
-        if self.mode in ("slo", "affinity"):
+        zeros = np.zeros(self._n_pairs, np.float32)
+        up = prefill = tpot = cost = prompt_cost = zeros
+        if "estimates" in pol.requires:
             est = request_pair_estimates(req.prompt_tokens,
                                          req.resp_tokens_mean,
                                          req.query_bytes, self._np_arrays)
             # unhealthy nodes: push their pairs out of feasibility
             dead = ~np.asarray(healthy)[self._pair_node]
             up = np.where(dead, np.float32(1e9), est["up"])
-            ttft_dl = (ttft_deadline if ttft_deadline is not None
-                       else float(self._slo_ttft[pred_cat]))
-            tpot_dl = (tpot_deadline if tpot_deadline is not None
-                       else float(self._slo_tpot[pred_cat]))
-            if self.mode == "affinity":
-                hit_node = self.monitor.hit_fractions(
-                    getattr(req, "session_id", -1),
-                    getattr(req, "sys_id", -1), float(req.prompt_tokens),
-                    float(getattr(req, "sys_tokens", 0)),
-                    block=self.cache_block)
-                pair = decide_pair_affinity_py(
-                    self.affinity_params, ttft_deadline=ttft_dl,
-                    tpot_deadline=tpot_dl, up=up, prefill=est["prefill"],
-                    tpot=est["tpot"], cost=est["cost"],
-                    prompt_cost=est["prompt_cost"],
-                    hit_frac=np.asarray(hit_node,
-                                        np.float32)[self._pair_node],
-                    queue_len=masked_queue, arrays=self._np_arrays)
-            else:
-                pair = decide_pair_slo_py(
-                    self.slo_params, ttft_deadline=ttft_dl,
-                    tpot_deadline=tpot_dl,
-                    up=up, prefill=est["prefill"], tpot=est["tpot"],
-                    cost=est["cost"], queue_len=masked_queue,
-                    arrays=self._np_arrays)
-        else:
-            pair = decide_pair_py(self.thresholds, complexity=c_i,
-                                  pred_category=pred_cat, pred_conf=conf,
-                                  queue_len=masked_queue,
-                                  arrays=self._np_arrays)
+            prefill, tpot = est["prefill"], est["tpot"]
+            cost, prompt_cost = est["cost"], est["prompt_cost"]
+        ttft_dl = (ttft_deadline if ttft_deadline is not None
+                   else float(self._slo_ttft[pred_cat]))
+        tpot_dl = (tpot_deadline if tpot_deadline is not None
+                   else float(self._slo_tpot[pred_cat]))
+        hit = zeros
+        if "cache" in pol.requires:
+            hit_node = self.monitor.hit_fractions(
+                getattr(req, "session_id", -1),
+                getattr(req, "sys_id", -1), float(req.prompt_tokens),
+                float(getattr(req, "sys_tokens", 0)),
+                block=self.cache_block)
+            hit = np.asarray(hit_node, np.float32)[self._pair_node]
+
+        inp = PolicyInputs(
+            index=np.int32(self._n_routed),
+            now=np.float32(self._n_routed if now is None else now),
+            complexity=np.float32(c_i), pred_category=np.int32(pred_cat),
+            pred_conf=np.float32(conf), ttft_deadline=np.float32(ttft_dl),
+            tpot_deadline=np.float32(tpot_dl),
+            prompt_tokens=np.float32(req.prompt_tokens),
+            up=up, prefill=prefill, tpot=tpot, cost=cost,
+            prompt_cost=prompt_cost, hit_frac=hit, queue_len=masked_queue)
+        pair = int(pol.decide_py(self.params, inp, self._np_arrays,
+                                 self._pstate))
         node = int(self._pair_node[pair])
 
-        # failover: if Algorithm 2 returned a pair on a dead node (e.g. the
+        # failover: if the policy returned a pair on a dead node (e.g. the
         # cloud fallback itself is down), pick any healthy pair
         if not healthy[node]:
-            alive = [p for p in range(len(self._pair_node))
+            alive = [p for p in range(self._n_pairs)
                      if healthy[self._pair_node[p]]]
             if not alive:
                 raise RuntimeError("no healthy nodes in cluster")
@@ -187,6 +251,14 @@ class RequestRouter:
             pair = (cloud_alive[0] if cloud_alive else
                     min(alive, key=lambda p: queue[self._pair_node[p]]))
             node = int(self._pair_node[pair])
+
+        # policy state advances on the pair actually dispatched (post
+        # failover) so e.g. the budget ledger bills real spend, and only for
+        # requests that are dispatched at all (the no-healthy-nodes raise
+        # above leaves the state untouched)
+        self._pstate = pol.update_py(self.params, self._pstate, inp, pair,
+                                     float(cost[pair]))
+        self._n_routed += 1
 
         backup = None
         if want_backup:
@@ -201,7 +273,7 @@ class RequestRouter:
         """A healthy pair on a *different* node, for hedged duplicates."""
         healthy = self.monitor.healthy_mask()
         pnode = int(self._pair_node[primary])
-        cands = [p for p in range(len(self._pair_node))
+        cands = [p for p in range(self._n_pairs)
                  if int(self._pair_node[p]) != pnode
                  and healthy[self._pair_node[p]]]
         if not cands:
@@ -262,17 +334,16 @@ class RequestRouter:
         arrival timestamps when every observation carries one, closed-loop
         with ``concurrency`` clients otherwise; with the recorded deadlines
         and the 4-objective QoE fitness when every observation carries a
-        contract). The search is warm-started from the previous re-opt's
-        survival-ordered population (``evolve_scan(..., archive=)``), then the
-        Eq. (1) weighted-sum pick (uniform ``weights`` by default) replaces
-        the live policy parameters. Returns them, or None if skipped.
+        contract). The genome encoding and fitness kind come from the active
+        policy's registry entry, so any registered policy re-fits here. The
+        search is warm-started from the previous re-opt's survival-ordered
+        population (``evolve_scan(..., archive=)``), then the Eq. (1)
+        weighted-sum pick (uniform ``weights`` by default) replaces the live
+        policy parameters. Returns them, or None if skipped.
         """
         from ..workload.trace import trace_from_requests
         from .fitness import EvalConfig, TraceEvaluator
         from .nsga2 import NSGA2, NSGA2Config
-        from .policy import (AFFINITY_BOUNDS_HI, AFFINITY_BOUNDS_LO,
-                             BOUNDS_HI, BOUNDS_LO, SLO_BOUNDS_HI,
-                             SLO_BOUNDS_LO)
 
         if not force and not self.should_reoptimize(drift_threshold,
                                                     min_history):
@@ -280,6 +351,7 @@ class RequestRouter:
         obs = self._history[-window:]
         if not obs:
             return None
+        pol = self.policy
 
         arrivals = None
         if all(o.now is not None for o in obs):
@@ -302,9 +374,9 @@ class RequestRouter:
                 [o.ttft_deadline for o in obs], np.float32)
             trace.tpot_deadline = np.asarray(
                 [o.tpot_deadline for o in obs], np.float32)
-        elif self.mode in ("slo", "affinity"):
-            # slo/affinity genomes are meaningless against +inf deadlines
-            # (every [γ, κ(, ρ)] is equally feasible -> degenerate flat
+        elif "deadlines" in pol.requires:
+            # deadline-aware genomes are meaningless against +inf deadlines
+            # (every parameter vector is equally feasible -> degenerate flat
             # fitness): fall back to the per-category table defaults
             # route() applies
             cat = trace.pred_category
@@ -324,23 +396,20 @@ class RequestRouter:
         evaluator = TraceEvaluator(trace, self.cluster, cfg_eval,
                                    bucket="pow2")
 
-        if self.mode == "slo":
-            genome_kind, lo, hi = "slo", SLO_BOUNDS_LO, SLO_BOUNDS_HI
-        elif self.mode == "affinity":
-            genome_kind, lo, hi = ("affinity", AFFINITY_BOUNDS_LO,
-                                   AFFINITY_BOUNDS_HI)
-        else:
-            genome_kind, lo, hi = "continuous", BOUNDS_LO, BOUNDS_HI
-        cfg = NSGA2Config(pop_size=pop_size, n_generations=generations,
-                          lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+        # genome encoding from the active policy's registry entry
+        cfg = NSGA2Config.from_policy(pol, pop_size=pop_size,
+                                      n_generations=generations)
         objectives = "qoe" if trace.has_slos else "paper"
-        opt = NSGA2(evaluator.make_fitness(genome_kind, objectives=objectives),
+        opt = NSGA2(evaluator.make_fitness(pol.name, objectives=objectives),
                     cfg)
         # warm start from the previous re-fit's survival-ordered population;
         # the archive is a dynamic argument (same shape every re-fit), so
         # warm-started runs share the compiled executable too
+        archive = self._archive
+        if archive is not None and archive.shape[1] != cfg.n_genes:
+            archive = None              # policy switched since the last fit
         state = opt.evolve_scan(jax.random.key(seed), generations,
-                                archive=self._archive)
+                                archive=archive)
         # archive the survival-ordered population for the next warm start
         self._archive = np.asarray(state.genomes)
 
@@ -348,14 +417,8 @@ class RequestRouter:
         w = (jnp.full((M,), 1.0 / M) if weights is None
              else jnp.asarray(weights, jnp.float32))
         genome, _ = opt.select_by_weights(state, w)
-        params = np.asarray(genome, np.float32)
-        if self.mode == "slo":
-            self.slo_params = params
-        elif self.mode == "affinity":
-            self.affinity_params = params
-        else:
-            self.thresholds = params
+        self.params = np.asarray(genome, np.float32)
         # cooldown: re-arm the drift detector for the *next* regime shift
         self._last_reopt_at = self._n_recorded
         self.monitor.rebaseline_drift()
-        return params
+        return self.params

@@ -52,7 +52,7 @@ def main():
         ev = TraceEvaluator(trace, cluster, EvalConfig(concurrency=4))
         cfg = NSGA2Config(pop_size=48, n_generations=args.generations,
                           lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-        opt = NSGA2(ev.make_fitness("continuous"), cfg)
+        opt = NSGA2(ev.make_fitness("threshold"), cfg)
         state = opt.evolve_scan(jax.random.key(0), args.generations)
         thresholds, F = opt.select_by_weights(
             state, jnp.array([1 / 3, 1 / 3, 1 / 3]))

@@ -32,3 +32,21 @@ def test_benchmarks_readme_covers_every_module():
             if p.stem not in ("common", "run", "__init__")]
     missing = [m for m in mods if f"{m}.py" not in doc]
     assert not missing, f"benchmarks/README.md misses: {missing}"
+
+
+def test_architecture_doc_has_policy_registry_guide():
+    """The extension guide must exist and name every registered policy, so
+    a policy shipped without docs fails tier-1."""
+    from repro.core.policies import list_policies
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "Policy registry & extension guide" in doc
+    assert "register_policy" in doc and "GenomeSpec" in doc
+    missing = [p for p in list_policies() if f"`{p}`" not in doc]
+    assert not missing, \
+        f"docs/architecture.md policy guide misses policies: {missing}"
+
+
+def test_readme_mentions_policy_registry():
+    readme = (REPO / "README.md").read_text()
+    assert "core/policies" in readme
+    assert "p2c-hedge" in readme and "budget" in readme

@@ -12,11 +12,14 @@ from repro.cluster.simulator import ClusterSimulator
 from repro.cluster.spec import paper_testbed
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config, archive_init
+from repro.core.policies import get_policy, list_policies
 from repro.core.policy import BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS
 from repro.core.router import RequestRouter
 from repro.workload.arrivals import (PhaseSpec, build_open_loop_trace,
                                      mmpp_arrivals, onoff_arrivals,
                                      poisson_arrivals)
+from repro.workload.sessions import SessionConfig, build_session_trace
+from repro.workload.slo import attach_slos
 
 CLUSTER = paper_testbed()
 
@@ -108,6 +111,36 @@ def test_open_loop_jax_matches_des_oracles(phases):
     # the two independent DES implementations agree bit-tight open-loop
     np.testing.assert_allclose(a.rt, b.rt, rtol=1e-9)
     np.testing.assert_allclose(a.ttft, b.ttft, rtol=1e-9)
+
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_policy_decisions_jax_match_des_oracles(policy):
+    """Registry-wide JAX/DES equivalence with the decisions made *in-loop*
+    on both sides: the evaluator's in-scan ``decide_jnp`` and the DES
+    oracles' ``decide_py`` (busy slots, cache hit fractions, deadline
+    contract, per-policy state) must route every request identically and
+    agree on all realized metrics — for every registered policy, with the
+    prefix-cache model enabled."""
+    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
+                             seed=7, n_requests=70)
+    attach_slos(tr, tightness=2.0, seed=7)
+    pol = get_policy(policy)
+    if pol.genome_spec.per_request:
+        genome = np.random.default_rng(0).integers(
+            0, CLUSTER.n_pairs, tr.n_requests).astype(np.int32)
+    else:
+        genome = pol.genome_spec.defaults
+    ev = TraceEvaluator(tr, CLUSTER, EvalConfig(mode="open",
+                                                prefix_cache=True))
+    res = ev.run_policy(policy, genome)
+    sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True)
+    for sr in (sim.run(policy=policy, genome=genome),
+               sim.run_event_heap(policy=policy, genome=genome)):
+        np.testing.assert_array_equal(np.asarray(res.assign), sr.assign)
+        for f in ("q", "cost", "rt", "ttft", "tpot", "hit"):
+            np.testing.assert_allclose(np.asarray(getattr(res, f)),
+                                       getattr(sr, f), rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{policy}:{f}")
 
 
 def test_open_loop_sparse_arrivals_have_no_wait():

@@ -1,0 +1,381 @@
+"""RoutingPolicy registry tests: registry-wide jnp≡py decision equivalence,
+the error/deprecation surface, grep-enforced absence of string dispatch in
+the consumer layers, masked-tail invariance + NSGA-II fit + router re-fit
+for every registered policy (including the two shipped through the registry:
+p2c-hedge and budget), and the compile-once regression (one ``_run_trace``
+trace per policy identity across re-fit windows)."""
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # soft optional dep
+
+from repro.cluster.spec import paper_testbed
+from repro.core import nsga2 as nsga2_mod
+from repro.core.fitness import EvalConfig, TraceEvaluator, _run_trace
+from repro.core.nsga2 import NSGA2, NSGA2Config
+from repro.core.policies import (PolicyInputs, get_policy, list_policies,
+                                 runtime_policies)
+from repro.core.policies.budget import WINDOW_S, BudgetPolicy
+from repro.core.router import RequestRouter
+from repro.workload.sessions import SessionConfig, build_session_trace
+from repro.workload.slo import attach_slos
+from repro.workload.trace import build_trace
+
+CLUSTER = paper_testbed()
+ARRAYS = CLUSTER.to_arrays()
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _session_trace(n=60, seed=1):
+    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
+                             seed=seed, n_requests=n)
+    attach_slos(tr, tightness=2.0, seed=seed)
+    return tr
+
+
+def _random_inputs(rng, n_genes_direct=32, index=None):
+    n_pairs, n_nodes = ARRAYS.n_pairs, ARRAYS.n_nodes
+    i = int(rng.integers(0, n_genes_direct)) if index is None else index
+    return PolicyInputs(
+        index=np.int32(i), now=np.float32(rng.uniform(0.0, 200.0)),
+        complexity=np.float32(rng.random()),
+        pred_category=np.int32(rng.integers(0, 3)),
+        pred_conf=np.float32(rng.random()),
+        ttft_deadline=np.float32(rng.uniform(0.1, 5.0)),
+        tpot_deadline=np.float32(rng.uniform(0.05, 1.0)),
+        prompt_tokens=np.float32(rng.integers(8, 512)),
+        up=rng.uniform(0, 1, n_pairs).astype(np.float32),
+        prefill=rng.uniform(0, 2, n_pairs).astype(np.float32),
+        tpot=rng.uniform(0.04, 0.3, n_pairs).astype(np.float32),
+        cost=rng.uniform(0, 1e-3, n_pairs).astype(np.float32),
+        prompt_cost=rng.uniform(0, 5e-4, n_pairs).astype(np.float32),
+        hit_frac=rng.uniform(0, 1, n_pairs).astype(np.float32),
+        queue_len=rng.integers(0, 10, n_nodes))
+
+
+def _random_genome(pol, rng, n_genes_direct=32):
+    spec = pol.genome_spec
+    if spec.per_request:
+        return rng.integers(0, ARRAYS.n_pairs,
+                            n_genes_direct).astype(np.int32)
+    return rng.uniform(spec.lo, spec.hi).astype(np.float32)
+
+
+def _random_state(pol, rng):
+    if pol.state_size == 0:
+        return pol.init_state()
+    # exercise both fresh-window and in-window ledgers
+    return np.array([float(rng.integers(-1, 6)),
+                     float(rng.uniform(0, 0.05))], np.float32)[:pol.state_size]
+
+
+# ---------------------------------------------------------------------------
+# registry-wide decision equivalence: decide_jnp == decide_py for EVERY
+# registered policy on randomized inputs (new policies get this for free via
+# the parametrization over list_policies())
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", list_policies())
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_decide_jnp_matches_py_for_every_policy(policy, seed):
+    pol = get_policy(policy)
+    rng = np.random.default_rng(seed)
+    genome = _random_genome(pol, rng)
+    state = _random_state(pol, rng)
+    inp = _random_inputs(rng)
+    want = pol.decide_py(genome, inp, ARRAYS, state)
+    jnp_inp = PolicyInputs(*(jnp.asarray(v) for v in inp))
+    got = int(pol.decide_jnp(jnp.asarray(genome), jnp_inp, ARRAYS,
+                             jnp.asarray(state, jnp.float32)))
+    assert want == got
+    assert 0 <= got < ARRAYS.n_pairs
+
+
+@pytest.mark.parametrize("policy", list_policies())
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_update_jnp_matches_py_for_every_policy(policy, seed):
+    """State transitions must agree too (exactly, in float32)."""
+    pol = get_policy(policy)
+    rng = np.random.default_rng(seed)
+    genome = _random_genome(pol, rng)
+    state = _random_state(pol, rng)
+    inp = _random_inputs(rng)
+    pair = int(rng.integers(0, ARRAYS.n_pairs))
+    cost = float(rng.uniform(0, 1e-3))
+    want = np.asarray(pol.update_py(genome, state, inp, pair, cost),
+                      np.float32)
+    jnp_inp = PolicyInputs(*(jnp.asarray(v) for v in inp))
+    got = np.asarray(pol.update_jnp(jnp.asarray(genome),
+                                    jnp.asarray(state, jnp.float32),
+                                    jnp_inp, jnp.int32(pair),
+                                    jnp.float32(cost)), np.float32)
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_decide_jnp_matches_py_fixed_seeds(policy):
+    """Deterministic mini-sweep of the same property (runs even without
+    hypothesis installed)."""
+    pol = get_policy(policy)
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        genome = _random_genome(pol, rng)
+        state = _random_state(pol, rng)
+        inp = _random_inputs(rng)
+        want = pol.decide_py(genome, inp, ARRAYS, state)
+        jnp_inp = PolicyInputs(*(jnp.asarray(v) for v in inp))
+        got = int(pol.decide_jnp(jnp.asarray(genome), jnp_inp, ARRAYS,
+                                 jnp.asarray(state, jnp.float32)))
+        assert want == got, (policy, seed)
+
+
+# ---------------------------------------------------------------------------
+# error surface + deprecation shims
+# ---------------------------------------------------------------------------
+def test_unknown_policy_raises_value_error_listing_names():
+    tr = build_trace(8, seed=0)
+    ev = TraceEvaluator(tr, CLUSTER)
+    with pytest.raises(ValueError) as ei:
+        ev.make_fitness("no-such-policy")
+    for name in list_policies():
+        assert name in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        RequestRouter(CLUSTER, mode="no-such-mode")
+    assert "threshold" in str(ei.value)
+    with pytest.raises(ValueError):
+        ev.run_policy("no-such-policy", np.zeros(3))
+
+
+def test_per_request_policy_rejected_by_router():
+    with pytest.raises(ValueError) as ei:
+        RequestRouter(CLUSTER, mode="direct")
+    assert "per-request" in str(ei.value)
+    assert "p2c-hedge" in str(ei.value)   # runtime-capable set is listed
+
+
+def test_legacy_genome_strings_warn_but_work():
+    tr = build_trace(8, seed=0)
+    attach_slos(tr, seed=0)
+    ev = TraceEvaluator(tr, CLUSTER)
+    with pytest.warns(DeprecationWarning, match="continuous"):
+        fit = ev.make_fitness("continuous")
+    g = jnp.asarray([get_policy("threshold").genome_spec.defaults] * 2)
+    F, viol = fit(g, jax.random.key(0))
+    assert F.shape == (2, 3)
+    with pytest.warns(DeprecationWarning, match="discrete"):
+        ev.make_fitness("discrete")
+    # canonical names stay silence-clean
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ev.make_fitness("slo")
+        RequestRouter(CLUSTER, mode="slo")
+
+
+# ---------------------------------------------------------------------------
+# grep-enforced: no string-dispatch branches remain in the consumer layers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("relpath", [
+    "src/repro/core/fitness.py",
+    "src/repro/core/router.py",
+    "src/repro/cluster/simulator.py",
+])
+def test_no_policy_string_dispatch_in_consumer_layers(relpath):
+    text = (REPO / relpath).read_text()
+    hits = re.findall(r".*(?:policy|mode|genome)\s*==\s*[\"'].*", text)
+    assert not hits, (f"{relpath} still string-dispatches on policy/mode: "
+                      f"{hits}")
+
+
+# ---------------------------------------------------------------------------
+# masked-tail invariance (bucketed eval) for every registered policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", list_policies())
+def test_masked_tail_invariance_every_policy(policy):
+    pol = get_policy(policy)
+    tr = _session_trace(n=50, seed=2)
+    cfg = EvalConfig(mode="open", prefix_cache=True)
+    plain = TraceEvaluator(tr, CLUSTER, cfg)
+    padded = TraceEvaluator(tr, CLUSTER, cfg, bucket="pow2")
+    genome = _random_genome(pol, np.random.default_rng(0),
+                            n_genes_direct=tr.n_requests)
+    a = plain.run_policy(policy, genome)
+    b = padded.run_policy(policy, genome)
+    assert (np.asarray(a.assign) == np.asarray(b.assign)).all()
+    for f in ("q", "cost", "rt", "ttft", "hit"):
+        np.testing.assert_allclose(np.asarray(getattr(a, f)),
+                                   np.asarray(getattr(b, f)), err_msg=f)
+    np.testing.assert_allclose(float(a.violation), float(b.violation))
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II end-to-end through the registry-derived genome spec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["p2c-hedge", "budget"])
+def test_new_policies_nsga2_fit_end_to_end(policy):
+    """The two policies shipped through the registry must be searchable with
+    a config derived from their GenomeSpec and runnable end-to-end."""
+    pol = get_policy(policy)
+    tr = _session_trace(n=48, seed=3)
+    ev = TraceEvaluator(tr, CLUSTER,
+                        EvalConfig(mode="open", prefix_cache=True),
+                        bucket="pow2")
+    cfg = NSGA2Config.from_policy(pol, pop_size=8, n_generations=3)
+    assert cfg.n_genes == pol.genome_spec.length
+    opt = NSGA2(ev.make_fitness(policy, objectives="qoe"), cfg)
+    state = opt.evolve_scan(jax.random.key(0), 3)
+    genome, F = opt.select_by_weights(state, jnp.full((4,), 0.25))
+    lo, hi = pol.genome_spec.lo, pol.genome_spec.hi
+    g = np.asarray(genome)
+    assert g.shape == (pol.genome_spec.length,)
+    assert (g >= lo - 1e-6).all() and (g <= hi + 1e-6).all()
+    res = ev.run_policy(policy, genome)
+    assert np.asarray(res.assign).shape == (tr.n_requests,)
+
+
+def test_from_policy_derives_bounds_and_length():
+    cfg = NSGA2Config.from_policy("slo", pop_size=8, n_generations=2)
+    assert cfg.n_genes == 2
+    np.testing.assert_allclose(np.asarray(cfg.lo),
+                               get_policy("slo").genome_spec.lo)
+    cfg = NSGA2Config.from_policy("direct", pop_size=8, n_generations=2,
+                                  genome_length=40,
+                                  n_choices=ARRAYS.n_pairs)
+    assert cfg.genome == "discrete" and cfg.n_genes == 40
+
+
+# ---------------------------------------------------------------------------
+# router: every runtime policy routes, fails over, and re-fits
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_router_reoptimize_installs_registry_genome(policy):
+    pol = get_policy(policy)
+    tr = _session_trace(n=64, seed=4)
+    router = RequestRouter(CLUSTER, mode=policy)
+    for i, req in enumerate(tr.requests):
+        d = router.route(req)
+        router.record(req, d, quality=0.5, cost=1e-4, rt=1.0,
+                      now=float(tr.arrival_time[i]),
+                      ttft_deadline=float(tr.ttft_deadline[i]),
+                      tpot_deadline=float(tr.tpot_deadline[i]))
+    params = router.maybe_reoptimize(force=True, window=64, generations=3,
+                                     pop_size=8, seed=0)
+    assert params is not None
+    assert params.shape == (pol.genome_spec.length,)
+    np.testing.assert_array_equal(params, router.params)
+    lo, hi = pol.genome_spec.lo, pol.genome_spec.hi
+    assert (params >= lo - 1e-6).all() and (params <= hi + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# compile-once: re-fits across windows add no new _run_trace traces beyond
+# one per policy identity
+# ---------------------------------------------------------------------------
+def test_refit_one_trace_per_policy_identity():
+    cfgs = {p: NSGA2Config.from_policy(p, pop_size=8, n_generations=2)
+            for p in ("slo", "p2c-hedge", "budget")}
+
+    def refit(policy, n, seed):
+        tr = build_trace(n, seed=seed)
+        attach_slos(tr, seed=seed)
+        ev = TraceEvaluator(tr, CLUSTER, EvalConfig(concurrency=4),
+                            bucket="pow2")
+        opt = NSGA2(ev.make_fitness(policy, objectives="qoe"), cfgs[policy])
+        return jax.block_until_ready(
+            opt.evolve_scan(jax.random.key(seed), 2).genomes)
+
+    for p in cfgs:
+        refit(p, 70, 0)                     # first re-fit per policy compiles
+    traces_before = _run_trace._cache_size()
+    runs_before = nsga2_mod._nsga2_run._cache_size()
+    for p in cfgs:                          # new windows, same pow2 bucket
+        refit(p, 90, 1)
+        refit(p, 100, 2)
+    assert _run_trace._cache_size() == traces_before, \
+        "re-fit across windows retraced _run_trace for an existing policy"
+    assert nsga2_mod._nsga2_run._cache_size() == runs_before, \
+        "re-fit across windows retraced the NSGA-II run"
+
+
+# ---------------------------------------------------------------------------
+# behavioural checks for the two new policies
+# ---------------------------------------------------------------------------
+def test_budget_ledger_windows_and_resets():
+    pol = BudgetPolicy()
+    rng = np.random.default_rng(0)
+    genome = np.asarray(pol.genome_spec.defaults)
+    state = pol.init_state()
+    inp0 = _random_inputs(rng)._replace(now=np.float32(1.0))
+    s1 = pol.update_py(genome, state, inp0, 2, 0.0)
+    assert s1[0] == 0.0 and s1[1] == np.float32(inp0.cost[2])
+    # same window accumulates
+    inp1 = inp0._replace(now=np.float32(WINDOW_S - 1.0))
+    s2 = pol.update_py(genome, s1, inp1, 3, 0.0)
+    assert s2[1] == np.float32(s1[1] + np.float32(inp1.cost[3]))
+    # next window resets the ledger
+    inp2 = inp0._replace(now=np.float32(WINDOW_S + 1.0))
+    s3 = pol.update_py(genome, s2, inp2, 3, 0.0)
+    assert s3[0] == 1.0 and s3[1] == np.float32(inp2.cost[3])
+
+
+def test_budget_cap_reduces_spend_vs_loose_budget():
+    tr = _session_trace(n=80, seed=5)
+    ev = TraceEvaluator(tr, CLUSTER,
+                        EvalConfig(mode="open", prefix_cache=True))
+    tight = ev.run_policy("budget", [1e-4, 0.9, 3.0])
+    loose = ev.run_policy("budget", [10.0, 0.9, 3.0])
+    assert float(jnp.sum(tight.cost)) < float(jnp.sum(loose.cost))
+    # exhausted ledger falls back to the globally cheapest pair, so tight
+    # budgets concentrate on the cheapest pairs rather than dropping traffic
+    assert np.asarray(tight.assign).shape == (tr.n_requests,)
+
+
+def test_des_policy_run_conserves_node_busy_time():
+    """Regression: the policy-decided DES path must accumulate
+    node_busy_time exactly like the fixed-assignment path (the in-loop
+    busy-slot probe must not clobber the accumulator)."""
+    from repro.cluster.simulator import ClusterSimulator
+    tr = _session_trace(n=50, seed=8)
+    sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True)
+    g = get_policy("slo").genome_spec.defaults
+    by_policy = sim.run(policy="slo", genome=g)
+    replay = sim.run(assign=by_policy.assign)
+    np.testing.assert_allclose(by_policy.node_busy_time,
+                               replay.node_busy_time)
+    assert by_policy.node_busy_time.sum() > 0
+
+
+def test_router_budget_ledger_bills_failover_pair():
+    """Regression: with the policy-chosen node down, the spend ledger must
+    bill the pair actually dispatched after failover, not the dead one."""
+    router = RequestRouter(CLUSTER, mode="budget")
+    req = build_trace(4, seed=0).requests[0]
+    d0 = router.route(req, now=0.0)        # healthy: establishes baseline
+    assert router._pstate[1] > 0
+    router2 = RequestRouter(CLUSTER, mode="budget")
+    router2.monitor.mark_down(d0.node)     # kill the chosen node
+    d1 = router2.route(req, now=0.0)
+    assert d1.node != d0.node
+    # ledger reflects the dispatched pair's cost row, not the dead pair's
+    from repro.core.fitness import request_pair_estimates
+    cost = request_pair_estimates(req.prompt_tokens, req.resp_tokens_mean,
+                                  req.query_bytes, router2._np_arrays)["cost"]
+    assert router2._pstate[1] == np.float32(cost[d1.pair])
+
+
+def test_p2c_spreads_load_and_is_deterministic():
+    tr = _session_trace(n=80, seed=6)
+    ev = TraceEvaluator(tr, CLUSTER,
+                        EvalConfig(mode="open", prefix_cache=True))
+    g = get_policy("p2c-hedge").genome_spec.defaults
+    a = np.asarray(ev.run_policy("p2c-hedge", g).assign)
+    b = np.asarray(ev.run_policy("p2c-hedge", g).assign)
+    np.testing.assert_array_equal(a, b)
+    # two-choice sampling over the pair table must actually spread traffic
+    assert len(np.unique(a)) >= 3

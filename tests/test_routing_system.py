@@ -14,6 +14,7 @@ from repro.core import baselines
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config
 from repro.core.objectives import overall_scores
+from repro.core.policies import runtime_policies
 from repro.core.policy import (BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS,
                                decide_pair_jnp, decide_pair_py)
 from repro.core.router import RequestRouter
@@ -176,7 +177,7 @@ def test_edge_only_model_matches_task_type():
 def test_nsga2_router_beats_naive_baselines(evaluator):
     cfg = NSGA2Config(pop_size=32, n_generations=30,
                       lo=jnp.asarray(BOUNDS_LO), hi=jnp.asarray(BOUNDS_HI))
-    opt = NSGA2(evaluator.make_fitness("continuous"), cfg)
+    opt = NSGA2(evaluator.make_fitness("threshold"), cfg)
     state = opt.evolve_scan(jax.random.key(0), 30)
     genome, _ = opt.select_by_weights(state, jnp.array([1 / 3, 1 / 3, 1 / 3]))
     rows = {}
@@ -197,13 +198,17 @@ def test_nsga2_router_beats_naive_baselines(evaluator):
 
 
 # ---------------------------------------------------------------------------
-# Runtime router: failover + hedging
+# Runtime router: failover + hedging (every runtime-capable registry policy
+# must survive node failure, not just the paper's threshold rule)
 # ---------------------------------------------------------------------------
-def test_router_failover_avoids_dead_edge_nodes():
-    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
-    # easy request normally goes to edge-0 (node 1)
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_router_failover_avoids_dead_edge_nodes(policy):
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS, mode=policy)
+    # easy request normally goes to edge-0 (node 1) under the paper defaults
     req = TRACE.requests[2]
-    d0 = router.route(req)
+    if policy == "threshold":
+        d0 = router.route(req)
+        assert d0.go_edge
     # kill every edge node: routing must fall back to cloud
     for j in (1, 2, 3):
         router.monitor.mark_down(j)
@@ -211,8 +216,9 @@ def test_router_failover_avoids_dead_edge_nodes():
     assert d1.node == 0 and not d1.go_edge
 
 
-def test_router_failover_cloud_down_picks_healthy_edge():
-    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_router_failover_cloud_down_picks_healthy_edge(policy):
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS, mode=policy)
     router.monitor.mark_down(0)
     # complex request would go to cloud; must fail over to a healthy node
     hard = max(TRACE.requests, key=lambda r: r.prompt_tokens)
@@ -220,16 +226,18 @@ def test_router_failover_cloud_down_picks_healthy_edge():
     assert d.node != 0
 
 
-def test_router_no_healthy_nodes_raises():
-    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_router_no_healthy_nodes_raises(policy):
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS, mode=policy)
     for j in range(4):
         router.monitor.mark_down(j)
     with pytest.raises(RuntimeError):
         router.route(TRACE.requests[0])
 
 
-def test_router_backup_pair_on_different_node():
-    router = RequestRouter(CLUSTER, PAPER_DEFAULTS)
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_router_backup_pair_on_different_node(policy):
+    router = RequestRouter(CLUSTER, PAPER_DEFAULTS, mode=policy)
     d = router.route(TRACE.requests[0], want_backup=True)
     assert d.backup_pair is not None
     pn = np.asarray(CLUSTER.to_arrays().pair_node)
