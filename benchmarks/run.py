@@ -10,9 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from . import (fig2_quality, fig3_tradeoff, fig4_concurrency, hotpath,
-                   nsga2_perf, online_drift, policy_matrix, prefix_reuse,
-                   roofline, slo_attainment, table2_routing)
+    from . import (disagg, fig2_quality, fig3_tradeoff, fig4_concurrency,
+                   hotpath, nsga2_perf, online_drift, policy_matrix,
+                   prefix_reuse, roofline, slo_attainment, table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
@@ -21,6 +21,7 @@ def main() -> None:
                ("online_drift", online_drift),
                ("prefix_reuse", prefix_reuse),
                ("policy_matrix", policy_matrix),
+               ("disagg", disagg),
                ("nsga2_perf", nsga2_perf),
                ("hotpath", hotpath),
                ("roofline", roofline)]

@@ -53,6 +53,9 @@ class SimResult:
     ttft: Optional[np.ndarray] = None   # upload + queue wait + prefill
     tpot: Optional[np.ndarray] = None   # decode seconds per output token
     hit: Optional[np.ndarray] = None    # realized cached-prefix fraction
+    # KV-transfer seconds between prefill and decode (disaggregated runs;
+    # exactly 0 on colocated routes)
+    transfer: Optional[np.ndarray] = None
 
     def summary(self) -> Dict[str, float]:
         out = {"avg_quality": float(self.q.mean()),
@@ -82,7 +85,8 @@ class ClusterSimulator:
     open-loop (requests released at explicit ``arrivals`` timestamps)."""
 
     def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0,
-                 prefix_cache: bool = False, cache_block: int = 16):
+                 prefix_cache: bool = False, cache_block: int = 16,
+                 disaggregated: bool = False):
         if prefix_cache:
             assert trace.has_sessions and trace.has_arrivals, \
                 "prefix_cache needs an open-loop session trace"
@@ -90,6 +94,7 @@ class ClusterSimulator:
         self.cluster = cluster
         self.prefix_cache = prefix_cache
         self.cache_block = cache_block
+        self.disaggregated = disaggregated
         # reuse the same static tables as the JAX path so quality/cost/
         # service-time definitions are shared; only queueing is independent
         from ..core.fitness import build_tables
@@ -108,6 +113,11 @@ class ClusterSimulator:
         self.np_arrays = arrays.numpy()
         self.pair_node = self.np_arrays.pair_node
         self.node_conc = self.np_arrays.node_conc
+        # colocated route per pair (disaggregated fault fallback)
+        self._colo_route = {
+            int(p): r for r, (p, q_) in enumerate(
+                zip(self.np_arrays.route_prefill,
+                    self.np_arrays.route_decode)) if p == q_}
 
     # -- prefix-cache mirror (independent of the JAX carry implementation) ----
     def _cache_state(self):
@@ -170,6 +180,12 @@ class ClusterSimulator:
             return None, None, None
         pol = get_policy(policy)        # ValueError lists registered names
         assert genome is not None, f"policy {pol.name!r} needs a genome"
+        if not pol.genome_spec.per_request:
+            want = "route" if self.disaggregated else "pair"
+            assert pol.decides == want, \
+                (f"policy {pol.name!r} decides over {pol.decides!r} indices "
+                 f"but the simulator was built with "
+                 f"disaggregated={self.disaggregated}")
         g = np.asarray(genome,
                        np.int32 if pol.genome_spec.discrete else np.float32)
         return pol, g, pol.init_state()
@@ -188,6 +204,15 @@ class ClusterSimulator:
         else:
             hit = np.zeros(len(self.pair_node), np.float32)
         has_slos = tr.has_slos
+        if self.disaggregated:
+            blk = float(self.cache_block)
+            kv_blk = np.float32(np.floor(
+                np.float32(tr.prompt_tokens[i]) / np.float32(blk)) * blk)
+            kv_bytes = (kv_blk * np.asarray(
+                self.np_arrays.pair_kv_bytes_per_token,
+                np.float32)).astype(np.float32)
+        else:
+            kv_bytes = np.zeros(len(self.pair_node), np.float32)
         return PolicyInputs(
             index=np.int32(i), now=np.float32(now),
             complexity=np.float32(tr.complexity[i]),
@@ -200,7 +225,64 @@ class ClusterSimulator:
             prompt_tokens=np.float32(tr.prompt_tokens[i]),
             up=self.up[i], prefill=self.prefill[i], tpot=self.tpot_pair,
             cost=self.cost[i], prompt_cost=self.prompt_cost[i],
-            hit_frac=hit, queue_len=np.asarray(busy, np.int64))
+            hit_frac=hit, queue_len=np.asarray(busy, np.int64),
+            kv_bytes=kv_bytes)
+
+    # -- disaggregated execution (shared by both oracles) --------------------
+    def _disagg_exec(self, cache, i: int, route: int, slots, arrival: float):
+        """Greedy-at-issue execution of one request over route ``route``:
+        prefill leg, KV transfer (0 on colocated routes), decode leg.
+        Mirrors the JAX scan's disaggregated arithmetic op-for-op; mutates
+        ``slots`` and the cache state, returns the accounting row."""
+        from ..core.policy import CACHED_TOKEN_PRICE_FACTOR
+        a = self.np_arrays
+        p = int(a.route_prefill[route])
+        qd = int(a.route_decode[route])
+        node_p = int(self.pair_node[p])
+        node_q = int(self.pair_node[qd])
+        colo = p == qd
+        blk = float(self.cache_block)
+        kv_blk = float(np.floor(float(self.trace.prompt_tokens[i]) / blk)
+                       * blk)
+        kv_b = kv_blk * float(a.pair_kv_bytes_per_token[p])
+        hf = self._cache_hit(cache, i, node_p)
+        prefill_eff = self.prefill[i, p] * (1.0 - hf)
+        decode_t = self.service[i, qd] - self.prefill[i, qd]
+        tt = (float(a.kv_lat[node_p, node_q])
+              + kv_b * float(a.kv_inv_bw[node_p, node_q]))
+        cost_i = (self.prompt_cost[i, p]
+                  * (1.0 - hf * (1.0 - CACHED_TOKEN_PRICE_FACTOR))
+                  + (self.cost[i, qd] - self.prompt_cost[i, qd])
+                  + kv_b * float(a.kv_egress[node_p, node_q]))
+        ready = arrival + self.up[i, p]
+        s_p = int(np.argmin(slots[node_p]))
+        start_p = max(ready, slots[node_p][s_p])
+        wait_p = start_p - ready
+        finish_p = start_p + prefill_eff
+        # colocated: one slot holds the whole service; split: the prefill
+        # slot frees at finish_p and the decode leg queues on node_q
+        slots[node_p][s_p] = finish_p + decode_t if colo else finish_p
+        if colo:
+            finish_d = finish_p + decode_t
+            wait_d = 0.0
+            transfer = 0.0
+        else:
+            ready_d = finish_p + tt
+            s_q = int(np.argmin(slots[node_q]))
+            start_d = max(ready_d, slots[node_q][s_q])
+            wait_d = start_d - ready_d
+            finish_d = start_d + decode_t
+            slots[node_q][s_q] = finish_d
+            transfer = tt
+        completion = finish_d + self.down[i, qd]
+        self._cache_admit(cache, i, node_p)
+        self._cache_admit(cache, i, node_q)
+        return {"pair": qd, "hf": hf, "cost": cost_i,
+                "wait": wait_p + wait_d,
+                "ttft": (start_p + prefill_eff) - arrival,
+                "transfer": transfer, "completion": completion,
+                "q": self.quality[i, qd], "tpot": self.tpot_pair[qd],
+                "busy": ((node_p, prefill_eff), (node_q, decode_t))}
 
     def run(self, assign: Optional[Sequence[int]] = None,
             concurrency: int = 1,
@@ -249,6 +331,7 @@ class ClusterSimulator:
         ttft = np.zeros(I)
         tpot = np.zeros(I)
         hit = np.zeros(I)
+        transfer = np.zeros(I)
         out_assign = np.zeros(I, np.int64)
         busy = np.zeros(n_nodes)
         cache = self._cache_state()
@@ -264,6 +347,37 @@ class ClusterSimulator:
                 pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
             else:
                 pair = int(assign[i])
+
+            if self.disaggregated:
+                # ``pair`` is a route index here; crash windows on either
+                # endpoint fall back to a colocated route
+                route = pair
+                a_ = self.np_arrays
+                ends = {int(self.pair_node[a_.route_prefill[route]]),
+                        int(self.pair_node[a_.route_decode[route]])}
+                for nd in sorted(ends):
+                    if nd in down_nodes:
+                        t_down, t_up = down_nodes[nd]
+                        if t_down <= arrival < t_up:
+                            fb = (on_failure(i, nd)
+                                  if on_failure is not None
+                                  else int(self.arrays.cloud_fallback_pair))
+                            route = self._colo_route.get(int(fb), route)
+                            break
+                row = self._disagg_exec(cache, i, route, slots, arrival)
+                client_ready[c] = row["completion"]
+                if pol is not None:
+                    pstate = pol.update_py(g, pstate, inp, row["pair"],
+                                           row["cost"])
+                q[i] = row["q"]; cost[i] = row["cost"]
+                rt[i] = row["completion"] - arrival
+                wait[i] = row["wait"]; ttft[i] = row["ttft"]
+                tpot[i] = row["tpot"]; hit[i] = row["hf"]
+                transfer[i] = row["transfer"]
+                out_assign[i] = route
+                for nd, dur in row["busy"]:
+                    busy[nd] += dur
+                continue
             node = int(self.pair_node[pair])
 
             if node in down_nodes:
@@ -298,7 +412,8 @@ class ClusterSimulator:
             busy[node] += service_i
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
+                         transfer=transfer)
 
     # -- event-heap variant -------------------------------------------------
     def run_event_heap(self, assign: Optional[Sequence[int]] = None,
@@ -322,6 +437,7 @@ class ClusterSimulator:
         q = np.zeros(I); cost = np.zeros(I); rt = np.zeros(I)
         wait = np.zeros(I); out_assign = np.zeros(I, np.int64)
         ttft = np.zeros(I); tpot = np.zeros(I); hit = np.zeros(I)
+        transfer = np.zeros(I)
         busy = np.zeros(n_nodes)
         cache = self._cache_state()
 
@@ -355,6 +471,22 @@ class ClusterSimulator:
                     pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
                 else:
                     pair = int(assign[i])
+                if self.disaggregated:
+                    row = self._disagg_exec(cache, i, pair, node_free, t)
+                    if pol is not None:
+                        pstate = pol.update_py(g, pstate, inp, row["pair"],
+                                               row["cost"])
+                    q[i] = row["q"]; cost[i] = row["cost"]
+                    rt[i] = row["completion"] - t
+                    wait[i] = row["wait"]; ttft[i] = row["ttft"]
+                    tpot[i] = row["tpot"]; hit[i] = row["hf"]
+                    transfer[i] = row["transfer"]
+                    out_assign[i] = pair
+                    for nd, dur in row["busy"]:
+                        busy[nd] += dur
+                    heapq.heappush(heap, (row["completion"], seq, "done",
+                                          (i, c))); seq += 1
+                    continue
                 node = int(self.pair_node[pair])
                 hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
                                                                     pair)
@@ -380,4 +512,5 @@ class ClusterSimulator:
                     seq += 1; issued += 1
 
         return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit)
+                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
+                         transfer=transfer)

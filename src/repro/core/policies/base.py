@@ -50,8 +50,9 @@ import numpy as np
 #: (complexity / category / confidence); "estimates" = per-pair phase/cost
 #: estimate rows (up, prefill, tpot, cost, prompt_cost); "deadlines" = the
 #: request's (TTFT, TPOT) QoE contract; "cache" = per-pair expected
-#: cached-prefix fractions from the prefix-cache state.
-REQUIREMENTS = ("features", "estimates", "deadlines", "cache")
+#: cached-prefix fractions from the prefix-cache state; "transfer" = per-pair
+#: KV-transfer byte sizes for disaggregated (prefill, decode) routing.
+REQUIREMENTS = ("features", "estimates", "deadlines", "cache", "transfer")
 
 
 class PolicyInputs(NamedTuple):
@@ -82,6 +83,10 @@ class PolicyInputs(NamedTuple):
     hit_frac: np.ndarray       # (n_pairs,) expected cached-prefix fraction
     # live cluster state
     queue_len: np.ndarray      # (n_nodes,) busy execution slots
+    # disaggregated serving: whole-block KV footprint of this prompt on each
+    # pair's model (bytes to move if prefill and decode run on different
+    # nodes). Zero-filled for policies that don't declare "transfer".
+    kv_bytes: np.ndarray = np.float32(0.0)  # (n_pairs,) float32 bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +132,11 @@ class RoutingPolicy:
     genome_spec: GenomeSpec = GenomeSpec(per_request=True)
     requires: frozenset = frozenset()
     state_size: int = 0
+    #: decision index space: "pair" policies return an index into the
+    #: (node, model) pair table; "route" policies return an index into the
+    #: (prefill_pair, decode_pair) route table (disaggregated serving) and
+    #: must be evaluated with ``EvalConfig(disaggregated=True)``.
+    decides: str = "pair"
 
     # -- decisions -----------------------------------------------------------
     def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):

@@ -68,6 +68,10 @@ class RouteDecision:
     go_edge: bool
     features: Tuple[float, int, float]   # (c_i, t_i, p_t)
     backup_pair: Optional[int] = None
+    # disaggregated serving (route-valued policies): the prefill leg's pair.
+    # None for ordinary pair decisions; equal to ``pair`` on colocated
+    # routes. ``pair`` is always the decode (billing/retirement) pair.
+    prefill_pair: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -225,6 +229,14 @@ class RequestRouter:
                 float(getattr(req, "sys_tokens", 0)),
                 block=self.cache_block)
             hit = np.asarray(hit_node, np.float32)[self._pair_node]
+        kv_bytes = zeros
+        if "transfer" in pol.requires:
+            blk = float(self.cache_block)
+            kv_blk = np.float32(np.floor(
+                np.float32(req.prompt_tokens) / np.float32(blk)) * blk)
+            kv_bytes = (kv_blk * np.asarray(
+                self._np_arrays.pair_kv_bytes_per_token,
+                np.float32)).astype(np.float32)
 
         inp = PolicyInputs(
             index=np.int32(self._n_routed),
@@ -234,23 +246,51 @@ class RequestRouter:
             tpot_deadline=np.float32(tpot_dl),
             prompt_tokens=np.float32(req.prompt_tokens),
             up=up, prefill=prefill, tpot=tpot, cost=cost,
-            prompt_cost=prompt_cost, hit_frac=hit, queue_len=masked_queue)
-        pair = int(pol.decide_py(self.params, inp, self._np_arrays,
-                                 self._pstate))
-        node = int(self._pair_node[pair])
+            prompt_cost=prompt_cost, hit_frac=hit, queue_len=masked_queue,
+            kv_bytes=kv_bytes)
+        decision = int(pol.decide_py(self.params, inp, self._np_arrays,
+                                     self._pstate))
 
-        # failover: if the policy returned a pair on a dead node (e.g. the
-        # cloud fallback itself is down), pick any healthy pair
-        if not healthy[node]:
-            alive = [p for p in range(self._n_pairs)
-                     if healthy[self._pair_node[p]]]
-            if not alive:
-                raise RuntimeError("no healthy nodes in cluster")
-            # prefer healthy cloud, then least-loaded healthy edge
-            cloud_alive = [p for p in alive if not self._pair_is_edge[p]]
-            pair = (cloud_alive[0] if cloud_alive else
-                    min(alive, key=lambda p: queue[self._pair_node[p]]))
+        prefill_pair = None
+        if pol.decides == "route":
+            # route-valued decision: resolve the (prefill, decode) legs;
+            # ``pair`` is the decode pair from here on
+            rp = self._np_arrays.route_prefill
+            rq = self._np_arrays.route_decode
+            prefill_pair, pair = int(rp[decision]), int(rq[decision])
+            node_p = int(self._pair_node[prefill_pair])
             node = int(self._pair_node[pair])
+            if not (healthy[node_p] and healthy[node]):
+                # failover: re-pick among routes with both endpoints healthy,
+                # preferring colocated ones (no handoff exposure while the
+                # cluster is degraded), then least-loaded decode node
+                cands = [r for r in range(len(rp))
+                         if healthy[self._pair_node[rp[r]]]
+                         and healthy[self._pair_node[rq[r]]]]
+                if not cands:
+                    raise RuntimeError("no healthy nodes in cluster")
+                colo = [r for r in cands if rp[r] == rq[r]]
+                pool = colo or cands
+                decision = min(pool,
+                               key=lambda r: queue[self._pair_node[rq[r]]])
+                prefill_pair, pair = int(rp[decision]), int(rq[decision])
+                node = int(self._pair_node[pair])
+        else:
+            pair = decision
+            node = int(self._pair_node[pair])
+
+            # failover: if the policy returned a pair on a dead node (e.g.
+            # the cloud fallback itself is down), pick any healthy pair
+            if not healthy[node]:
+                alive = [p for p in range(self._n_pairs)
+                         if healthy[self._pair_node[p]]]
+                if not alive:
+                    raise RuntimeError("no healthy nodes in cluster")
+                # prefer healthy cloud, then least-loaded healthy edge
+                cloud_alive = [p for p in alive if not self._pair_is_edge[p]]
+                pair = (cloud_alive[0] if cloud_alive else
+                        min(alive, key=lambda p: queue[self._pair_node[p]]))
+                node = int(self._pair_node[pair])
 
         # policy state advances on the pair actually dispatched (post
         # failover) so e.g. the budget ledger bills real spend, and only for
@@ -267,7 +307,8 @@ class RequestRouter:
             pair=int(pair), node=node,
             model=int(self._np_arrays.pair_model[pair]),
             go_edge=bool(self._pair_is_edge[pair]),
-            features=(c_i, pred_cat, conf), backup_pair=backup)
+            features=(c_i, pred_cat, conf), backup_pair=backup,
+            prefill_pair=prefill_pair)
 
     def backup_pair(self, primary: int) -> Optional[int]:
         """A healthy pair on a *different* node, for hedged duplicates."""
@@ -388,7 +429,9 @@ class RequestRouter:
             concurrency=concurrency,
             # re-fit against the cache dynamics the window actually had
             prefix_cache=(arrivals is not None and trace.has_sessions),
-            cache_block=self.cache_block)
+            cache_block=self.cache_block,
+            # route-valued policies re-fit against the disaggregated model
+            disaggregated=pol.decides == "route")
         # bucketed (compile-once) evaluation: windows of different lengths
         # pad to the same power-of-two bucket, so every re-fit after the
         # first reuses the compiled trace-eval + NSGA-II executables instead

@@ -246,6 +246,101 @@ class LLMEngine:
             self._admit()
         return retired
 
+    # -- disaggregated prefill/decode (KV handoff) ----------------------------
+    def prefill_only(self, request_id: int, tokens: np.ndarray) -> List[int]:
+        """Prefill-role half of a disaggregated request: compute (or reuse)
+        the whole-block KV of ``tokens`` in the paged store **without**
+        occupying a decode slot, and return the block ids pinned for export.
+
+        The pins keep the blocks alive while the payload is in flight; the
+        scheduler must pair every call with :meth:`release_export` (delivery
+        or abort) or the blocks leak as permanently-active. May return fewer
+        than ``len(tokens) // block_size`` blocks when the pool runs dry —
+        the decode side simply re-prefills the uncovered tail, so a short
+        export is still exact."""
+        assert self.kv is not None, "prefill_only requires prefix_cache=True"
+        tokens = np.asarray(tokens, np.int32)
+        L = len(tokens)
+        assert L <= self.ecfg.max_seq, "request exceeds engine max_seq"
+        bs = self.kv.block_size
+        st = self.kv.cache.stats
+        # uncapped whole-block match: unlike decode admission we need no
+        # suffix token here, a fully cached prompt exports with zero compute
+        cached = self.kv.cache.index.match(tokens)
+        self.kv.cache.acquire(cached)
+        prefix_len = len(cached) * bs
+        st.lookups += 1
+        if cached:
+            st.hits += 1
+            st.hit_tokens += prefix_len
+        st.prefill_tokens_total += L
+        st.prefill_tokens_run += L - prefix_len
+        n_whole = L // bs
+        new_ids: List[int] = []
+        if n_whole > len(cached):
+            suffix = jnp.asarray(tokens[prefix_len:], jnp.int32)[None]
+            if cached:
+                _, cache1 = lm.prefill_extend(
+                    self.params, self.cfg, {"tokens": suffix},
+                    self.kv.gather(cached), max_seq=self.ecfg.max_seq)
+            else:
+                _, cache1 = lm.prefill(self.params, self.cfg,
+                                       {"tokens": suffix},
+                                       max_seq=self.ecfg.max_seq)
+            for _ in range(len(cached), n_whole):
+                bid = self.kv.cache.allocate()
+                if bid is None:   # pool exhausted: export what we have
+                    break
+                new_ids.append(bid)
+            if new_ids:
+                self.kv.scatter(new_ids, len(cached), cache1.layer)
+                n_tok = (len(cached) + len(new_ids)) * bs
+                self.kv.cache.commit(tokens[:n_tok], cached + new_ids)
+        return cached + new_ids
+
+    def export_kv(self, block_ids: List[int]):
+        """Host-copy the pinned blocks of a :meth:`prefill_only` result (the
+        wire payload of the KV handoff)."""
+        assert self.kv is not None
+        return self.kv.export_blocks(block_ids)
+
+    def release_export(self, block_ids: List[int]) -> None:
+        """Drop the export pins: committed blocks become evictable-cached,
+        uncommitted duplicates return to the free list. Refcounts return to
+        their pre-handoff baseline."""
+        if self.kv is not None and block_ids:
+            self.kv.cache.release(block_ids)
+
+    def import_kv(self, tokens: np.ndarray, slabs) -> bool:
+        """Decode-role half of the handoff: land exported slabs covering the
+        whole-block prefix ``tokens`` into this engine's pool and index them,
+        so the next ``submit`` of the full prompt reuses them bit-identically
+        (paged reuse is exact). Returns False — caller falls back to a full
+        re-prefill — when this engine has no paged store or its pool cannot
+        supply enough blocks."""
+        if self.kv is None:
+            return False
+        tokens = np.asarray(tokens, np.int32)
+        bs = self.kv.block_size
+        n = len(tokens) // bs
+        assert n * bs == len(tokens), "KV import must be whole-block"
+        if n == 0:
+            return False
+        ids: List[int] = []
+        for _ in range(n):
+            bid = self.kv.cache.allocate()
+            if bid is None:
+                self.kv.cache.release(ids)   # uncommitted -> free list
+                return False
+            ids.append(bid)
+        self.kv.import_blocks(ids, slabs)
+        # commit keeps canonical blocks for chunks already indexed here; our
+        # duplicates stay unindexed and free on release, new chunks become
+        # evictable-cached — either way no pin outlives this call
+        self.kv.cache.commit(tokens, ids)
+        self.kv.cache.release(ids)
+        return True
+
     def cancel(self, request_id: int) -> bool:
         """Abort a request wherever it currently lives (active slot or
         admission queue). Frees the slot immediately and admits queued work

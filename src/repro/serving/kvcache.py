@@ -319,6 +319,30 @@ class PagedKVStore:
             out.append((view(k_pool), view(v_pool)))
         return tuple(out)
 
+    def export_blocks(self, blocks: Sequence[int]):
+        """Host copy of the K/V contents of ``blocks`` — the payload of a
+        disaggregated prefill→decode KV handoff. Returns one ``(k, v)`` slab
+        pair per pattern position, each ``(P, len(blocks), bs, H, D)``; the
+        copy is taken eagerly so the transfer survives the source pool
+        mutating (or the source node dying) while the payload is in flight."""
+        ids = jnp.asarray(list(blocks), jnp.int32)
+        out: List[Tuple[np.ndarray, np.ndarray]] = []
+        for k_pool, v_pool in self.pools:
+            out.append((np.asarray(jnp.take(k_pool, ids, axis=1)),
+                        np.asarray(jnp.take(v_pool, ids, axis=1))))
+        return out
+
+    def import_blocks(self, blocks: Sequence[int], slabs):
+        """Write slabs from :meth:`export_blocks` into this pool at physical
+        ids ``blocks`` (the decode-side half of a KV handoff) — one batched
+        index update per pool, mirroring :meth:`scatter`."""
+        ids = jnp.asarray(list(blocks), jnp.int32)
+        for pos, (k_slab, v_slab) in enumerate(slabs):
+            k_pool, v_pool = self.pools[pos]
+            self.pools[pos] = (
+                k_pool.at[:, ids].set(jnp.asarray(k_slab, k_pool.dtype)),
+                v_pool.at[:, ids].set(jnp.asarray(v_slab, v_pool.dtype)))
+
     def scatter(self, blocks: Sequence[int], start_block: int, layer_cache):
         """Write whole blocks ``start_block..`` of a single-request prefill
         cache (tuple over positions of (k, v) ``(P, 1, Smax, H, D)``) into

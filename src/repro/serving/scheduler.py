@@ -9,6 +9,15 @@ drives all engines' continuous-batching loops. Beyond-paper fault tolerance:
 * **node failure** — ``fail_node`` marks a node down; its in-flight requests
   are re-queued and re-routed; the monitor masks it from Algorithm 2 until
   ``recover_node``;
+* **disaggregated prefill/decode** — when the router runs a route-valued
+  policy (``mode="disagg"``) and picks a split route, the prefill leg runs
+  via ``LLMEngine.prefill_only`` on the prefill-role node, the exported KV
+  rides a **transfer-in-flight queue** for ``ceil(link_seconds /
+  tick_seconds)`` ticks, and delivery imports the blocks into the decode
+  engine's paged pool so admission reuses them bit-identically. Either
+  endpoint dying mid-handoff aborts the transfer (export pins released /
+  gone with the dead pool), closes the prefill leg's accounting, and
+  re-routes the request with a full re-prefill;
 * **straggler hedging** — a request whose engine has run more than
   ``hedge_after`` iterations beyond the node's EWMA issues a duplicate on
   the router's backup pair; first completion wins, the loser is **cancelled**
@@ -54,11 +63,32 @@ class _Flight:
     hedge_pair: Optional[int] = None
 
 
+@dataclasses.dataclass
+class _Transfer:
+    """A KV handoff in flight between a prefill-role and a decode-role node.
+
+    The payload is host-copied at departure, but delivery is gated on the
+    ETA tick *and* both endpoints staying alive: either endpoint dying
+    mid-transfer aborts the handoff and the request re-routes with a full
+    re-prefill (``ClusterServer.fail_node``)."""
+
+    sreq: ServeRequest
+    prefill_pair: int
+    decode_pair: int
+    block_ids: list
+    tokens: np.ndarray
+    n_cov: int                 # whole-block tokens covered by the payload
+    payload: object            # host K/V slabs (kvcache.export_blocks)
+    depart_tick: int
+    eta: int
+
+
 class ClusterServer:
     def __init__(self, cluster: ClusterSpec, model_builders: Dict[str, tuple],
                  thresholds, engine_cfg: EngineConfig = EngineConfig(),
                  hedge_after: int = 64, vocab_cap: Optional[int] = None,
-                 router_kwargs: Optional[dict] = None):
+                 router_kwargs: Optional[dict] = None,
+                 tick_seconds: float = 0.05):
         """model_builders: model name -> (ModelConfig, params).
         router_kwargs: extra RequestRouter arguments (e.g.
         ``mode="affinity"`` for cache-affinity dispatch)."""
@@ -74,10 +104,13 @@ class ClusterServer:
             self.engines[p] = LLMEngine(mcfg, params, engine_cfg)
             self.pair_model_cfg[p] = mcfg
         self.inflight: Dict[int, _Flight] = {}
+        self.transfers: Dict[int, _Transfer] = {}   # KV handoffs in flight
         self.done: Dict[int, dict] = {}
         self.hedge_after = hedge_after
+        self.tick_seconds = tick_seconds   # converts KV-link seconds -> ticks
         self._hedges = 0
         self._reroutes = 0
+        self._handoffs = 0
         self.ticks = 0   # simulated scheduler clock: one unit per step()
 
     # -- helpers ---------------------------------------------------------------
@@ -122,11 +155,65 @@ class ClusterServer:
                 node, ("sys", yid),
                 int(getattr(req, "sys_tokens", 0)) // blk * blk)
 
+    def _start_handoff(self, sreq: ServeRequest, prefill_pair: int,
+                       decode_pair: int) -> bool:
+        """Disaggregated dispatch: run the prefill leg now, put the exported
+        KV on the transfer-in-flight queue. Returns False when the route
+        cannot hand off (no paged stores, same node, or nothing block-aligned
+        to ship) — the caller then serves the request colocated on the decode
+        pair with a full prefill."""
+        eng_p = self.engines[prefill_pair]
+        eng_q = self.engines[decode_pair]
+        arr = self.router._np_arrays
+        node_p = int(arr.pair_node[prefill_pair])
+        node_q = int(arr.pair_node[decode_pair])
+        if eng_p.kv is None or eng_q.kv is None or node_p == node_q:
+            return False
+        mcfg = self.pair_model_cfg[decode_pair]
+        tokens = self._tokenize(sreq.req, mcfg.vocab)
+        bs = eng_p.kv.block_size
+        if len(tokens) < bs:
+            return False   # no whole block to ship
+        self.monitor.on_dispatch(node_p)
+        block_ids = eng_p.prefill_only(sreq.request_id, tokens)
+        n_cov = len(block_ids) * bs
+        if not block_ids:
+            # pool exhausted before the first block: close the prefill leg
+            # and fall back to a colocated full prefill
+            self.monitor.on_cancel(node_p)
+            return False
+        payload = eng_p.export_kv(block_ids)
+        kv_bytes = float(n_cov) * float(arr.pair_kv_bytes_per_token[
+            prefill_pair])
+        tt = float(arr.kv_lat[node_p, node_q]) + \
+            kv_bytes * float(arr.kv_inv_bw[node_p, node_q])
+        ticks = max(1, int(np.ceil(tt / self.tick_seconds)))
+        self.transfers[sreq.request_id] = _Transfer(
+            sreq=sreq, prefill_pair=prefill_pair, decode_pair=decode_pair,
+            block_ids=block_ids, tokens=tokens, n_cov=n_cov, payload=payload,
+            depart_tick=self.ticks, eta=self.ticks + ticks)
+        self._handoffs += 1
+        return True
+
+    def _route_dispatch(self, sreq: ServeRequest, iters: int = 0):
+        """Route one request and dispatch it — colocated into an engine, or
+        through the KV-handoff pipeline when a route-valued policy split the
+        (prefill, decode) legs across nodes."""
+        decision = self.router.route(sreq.req)
+        if (decision.prefill_pair is not None
+                and decision.prefill_pair != decision.pair
+                and self._start_handoff(sreq, decision.prefill_pair,
+                                        decision.pair)):
+            return decision
+        self._dispatch(sreq, decision.pair)
+        self.inflight[sreq.request_id] = _Flight(sreq=sreq,
+                                                 pair=decision.pair,
+                                                 iters=iters)
+        return decision
+
     # -- public ------------------------------------------------------------------
     def submit(self, sreq: ServeRequest):
-        decision = self.router.route(sreq.req)
-        self._dispatch(sreq, decision.pair)
-        self.inflight[sreq.request_id] = _Flight(sreq=sreq, pair=decision.pair)
+        self._route_dispatch(sreq)
 
     def fail_node(self, node: int):
         """Crash a node: mask it and re-route its in-flight requests. The
@@ -137,6 +224,26 @@ class ClusterServer:
         self.monitor.mark_down(node)
         self.monitor.drop_prefixes(node)
         pair_node = np.asarray(self.router.arrays.pair_node)
+        # abort KV handoffs touching the dead node. Source died (covers both
+        # "prefill complete but pre-transfer" and mid-transfer): the payload
+        # pins go down with the node's pools below, close the prefill leg as
+        # a failure. Destination died: the source is alive, drop its export
+        # pins explicitly (orphaned blocks return to the cache baseline) and
+        # close the leg as cancelled. Either way the request re-routes and
+        # re-prefills from scratch on a healthy route.
+        for rid, tr in list(self.transfers.items()):
+            node_p = int(pair_node[tr.prefill_pair])
+            node_q = int(pair_node[tr.decode_pair])
+            if node_p != node and node_q != node:
+                continue
+            del self.transfers[rid]
+            if node_p == node:
+                self.monitor.on_failure(node_p)
+            else:
+                self.engines[tr.prefill_pair].release_export(tr.block_ids)
+                self.monitor.on_cancel(node_p)
+            self._reroutes += 1
+            self._route_dispatch(tr.sreq)
         for rid, fl in list(self.inflight.items()):
             hedge_dead = (fl.hedge_pair is not None
                           and int(pair_node[fl.hedge_pair]) == node)
@@ -178,6 +285,23 @@ class ClusterServer:
         clock stays one tick per call."""
         self.ticks += 1
         pair_node = np.asarray(self.router.arrays.pair_node)
+        # deliver due KV handoffs: drop the source's export pins, land the
+        # payload in the decode engine's pool (a full pool degrades to a
+        # plain re-prefill — outputs stay byte-identical either way) and
+        # admit the request on the decode pair, which now matches the
+        # imported prefix
+        for rid, tr in list(self.transfers.items()):
+            if self.ticks < tr.eta:
+                continue
+            del self.transfers[rid]
+            node_p = int(pair_node[tr.prefill_pair])
+            self.engines[tr.prefill_pair].release_export(tr.block_ids)
+            self.monitor.on_complete(
+                node_p, latency=float(self.ticks - tr.depart_tick))
+            self.engines[tr.decode_pair].import_kv(
+                tr.tokens[:tr.n_cov], tr.payload)
+            self._dispatch(tr.sreq, tr.decode_pair)
+            self.inflight[rid] = _Flight(sreq=tr.sreq, pair=tr.decode_pair)
         advanced: Dict[int, int] = {}
         for pair, eng in self.engines.items():
             node = int(pair_node[pair])
@@ -214,7 +338,7 @@ class ClusterServer:
 
     def run(self, max_ticks: int = 2000, chunk: int = 1) -> Dict[int, dict]:
         t = 0
-        while self.inflight:
+        while self.inflight or self.transfers:
             self.step(chunk=chunk)
             t += 1
             if t > max_ticks:
@@ -224,7 +348,8 @@ class ClusterServer:
 
     def stats(self) -> dict:
         return {"completed": len(self.done), "hedges": self._hedges,
-                "reroutes": self._reroutes,
+                "reroutes": self._reroutes, "handoffs": self._handoffs,
+                "transfers_inflight": len(self.transfers),
                 "cancelled": sum(s.total_cancelled
                                  for s in self.monitor.stats.values()),
                 "queue_lengths": self.monitor.queue_lengths()}

@@ -1,0 +1,72 @@
+"""Shared test fixtures/helpers (deduplicated from the per-file copies).
+
+Two access styles, because pytest fixtures cannot feed module-level
+constants or ``@pytest.mark.parametrize`` expressions:
+
+* **importable helpers** — ``from conftest import shared_cluster, ...`` for
+  module scope (the testbed is built once per process via ``lru_cache``);
+* **fixtures** — ``cluster`` / ``arrays`` / ``session_trace`` / ``rng`` for
+  ordinary per-test injection.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.cluster.spec import paper_testbed
+
+
+@functools.lru_cache(maxsize=None)
+def shared_cluster():
+    """The paper's 4-node testbed, built once per test process."""
+    return paper_testbed()
+
+
+@functools.lru_cache(maxsize=None)
+def shared_arrays():
+    """`shared_cluster().to_arrays()`, cached (device constants)."""
+    return shared_cluster().to_arrays()
+
+
+def make_session_trace(n_requests=None, seed=1, n_sessions=10,
+                       mean_turns=3.0, tightness=2.0):
+    """Multi-turn session trace with SLOs attached — the shared workload of
+    the policy/online/session test modules."""
+    from repro.workload.sessions import SessionConfig, build_session_trace
+    from repro.workload.slo import attach_slos
+
+    tr = build_session_trace(
+        SessionConfig(n_sessions=n_sessions, mean_turns=mean_turns),
+        seed=seed, n_requests=n_requests)
+    attach_slos(tr, tightness=tightness, seed=seed)
+    return tr
+
+
+@pytest.fixture(scope="session")
+def cluster():
+    return shared_cluster()
+
+
+@pytest.fixture(scope="session")
+def arrays():
+    return shared_arrays()
+
+
+@pytest.fixture(scope="session")
+def session_trace():
+    """The historical test_sessions workload (n_sessions=10, seed=3)."""
+    return make_session_trace(seed=3, tightness=2.0)
+
+
+@pytest.fixture
+def make_trace():
+    """Factory fixture: build session traces with explicit sizes/seeds."""
+    return make_session_trace
+
+
+@pytest.fixture
+def rng():
+    """Deterministic per-test RNG."""
+    return np.random.default_rng(0)

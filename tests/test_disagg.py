@@ -1,0 +1,181 @@
+"""Disaggregated prefill/decode serving: KV handoff byte-identity against a
+colocated engine, end-to-end disagg routing through the cluster server, and
+fault injection on both handoff endpoints (prefill node dies after prefill
+but before delivery; decode node dies mid-transfer) — each must re-dispatch
+to completion, leak no KV blocks, and keep the per-node dispatch ledger
+conserved."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.spec import disagg_testbed
+from repro.configs import get
+from repro.core.policy import PAPER_DEFAULTS
+from repro.models import lm
+from repro.serving import ClusterServer, EngineConfig, LLMEngine, ServeRequest
+from repro.workload.trace import build_trace
+
+BLOCK = 8
+CACHE_BLOCKS = 32
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get("stablelm-3b").smoke()
+    return cfg, lm.init(jax.random.key(0), cfg)
+
+
+def _ecfg(**over):
+    kw = dict(max_slots=2, max_seq=48, max_new_tokens=3, prefix_cache=True,
+              block_size=BLOCK, cache_blocks=CACHE_BLOCKS)
+    kw.update(over)
+    return EngineConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def disagg_parts(tiny_model):
+    """disagg testbed + single-model builders + long-prompt requests (every
+    prompt spans >= 2 whole KV blocks so a handoff always has payload)."""
+    cfg, params = tiny_model
+    cluster = disagg_testbed()
+    builders = {"gemma3:27b": (cfg, params)}
+    reqs = [dataclasses.replace(r, text=" ".join(f"w{i}_{j}"
+                                                 for j in range(20)),
+                                prompt_tokens=20)
+            for i, r in enumerate(build_trace(24, seed=5).requests[:10])]
+    return cluster, builders, reqs
+
+
+def _server(cluster, builders):
+    return ClusterServer(cluster, builders, PAPER_DEFAULTS, _ecfg(),
+                         router_kwargs={"mode": "disagg"})
+
+
+def _split_route(srv):
+    """First route whose prefill and decode legs live on different nodes."""
+    arr = srv.router._np_arrays
+    rp, rq = arr.route_prefill, arr.route_decode
+    r = next(i for i in range(len(rp))
+             if arr.pair_node[rp[i]] != arr.pair_node[rq[i]])
+    return int(rp[r]), int(rq[r])
+
+
+def _assert_conserved(srv):
+    for node, s in srv.monitor.stats.items():
+        assert s.total_dispatched == (s.total_completed + s.total_failed
+                                      + s.total_cancelled), (node, s)
+        assert s.outstanding == 0, (node, s)
+
+
+def _active_blocks(eng):
+    return int(np.sum(eng.kv.cache.pool.ref > 0))
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: decode after KV import == colocated prefill+decode
+# ---------------------------------------------------------------------------
+def test_kv_handoff_decode_is_byte_identical(tiny_model):
+    """Export whole-block KV on a prefill engine, import it on a separate
+    decode engine, decode there: tokens must equal a colocated run, and the
+    decode engine must have *reused* the imported blocks, not re-prefilled
+    them."""
+    cfg, params = tiny_model
+    ecfg = _ecfg(max_seq=64, max_new_tokens=5)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=19).astype(np.int32)
+
+    colo = LLMEngine(cfg, params, ecfg)
+    colo.submit(0, prompt, max_new_tokens=5)
+    want = colo.run_to_completion()[0]["tokens"]
+
+    eng_p = LLMEngine(cfg, params, ecfg)
+    eng_q = LLMEngine(cfg, params, ecfg)
+    blocks = eng_p.prefill_only(7, prompt)
+    assert len(blocks) == len(prompt) // BLOCK   # whole blocks only
+    payload = eng_p.export_kv(blocks)
+    n_cov = len(blocks) * BLOCK
+    assert eng_q.import_kv(prompt[:n_cov], payload)
+    eng_p.release_export(blocks)
+    # source pins released: blocks survive as evictable cache, none active
+    assert _active_blocks(eng_p) == 0
+    eng_p.kv.cache.check_invariants()
+    eng_q.kv.cache.check_invariants()
+
+    eng_q.submit(0, prompt, max_new_tokens=5)
+    got = eng_q.run_to_completion()[0]["tokens"]
+    assert got == want
+    st = eng_q.cache_stats()
+    assert st["hits"] >= 1 and st["hit_tokens"] >= n_cov - BLOCK, st
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: disagg router drives real handoffs through the server
+# ---------------------------------------------------------------------------
+def test_disagg_server_serves_all_with_handoffs(disagg_parts):
+    cluster, builders, reqs = disagg_parts
+    srv = _server(cluster, builders)
+    for i, r in enumerate(reqs):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=3))
+    done = srv.run()
+    assert sorted(done) == list(range(len(reqs)))
+    stats = srv.stats()
+    assert stats["handoffs"] >= 1, stats       # split routes actually taken
+    assert stats["transfers_inflight"] == 0
+    _assert_conserved(srv)
+    for eng in srv.engines.values():
+        eng.kv.cache.check_invariants()
+        assert _active_blocks(eng) == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection on both handoff endpoints
+# ---------------------------------------------------------------------------
+def test_prefill_node_death_before_delivery(disagg_parts):
+    """Kill the prefill node after prefill-complete but pre-delivery: the
+    transfer aborts, the request re-dispatches elsewhere to completion, and
+    the dead node's pool drains to empty (its export pins died with it)."""
+    cluster, builders, reqs = disagg_parts
+    srv = _server(cluster, builders)
+    p, q = _split_route(srv)
+    arr = srv.router._np_arrays
+    node_p = int(arr.pair_node[p])
+    assert srv._start_handoff(
+        ServeRequest(request_id=0, req=reqs[0], max_new_tokens=3), p, q)
+    assert srv.stats()["transfers_inflight"] == 1
+
+    srv.fail_node(node_p)
+    done = srv.run()
+    assert 0 in done and len(done[0]["tokens"]) == 3
+    assert srv.stats()["reroutes"] >= 1
+    _assert_conserved(srv)
+    pair_node = arr.pair_node
+    for pr, eng in srv.engines.items():
+        eng.kv.cache.check_invariants()
+        if int(pair_node[pr]) == node_p:       # restarted empty, no orphans
+            assert eng.kv.cache.pool.n_free == CACHE_BLOCKS
+
+
+def test_decode_node_death_mid_transfer(disagg_parts):
+    """Kill the decode node while the KV payload is in flight: the live
+    source must drop its export pins (refcounts back to baseline), and the
+    request re-dispatches to completion with nothing leaked."""
+    cluster, builders, reqs = disagg_parts
+    srv = _server(cluster, builders)
+    p, q = _split_route(srv)
+    arr = srv.router._np_arrays
+    node_q = int(arr.pair_node[q])
+    assert srv._start_handoff(
+        ServeRequest(request_id=0, req=reqs[0], max_new_tokens=3), p, q)
+    assert _active_blocks(srv.engines[p]) > 0  # export pins held
+
+    srv.fail_node(node_q)
+    done = srv.run()
+    assert not srv.transfers
+    assert 0 in done and len(done[0]["tokens"]) == 3
+    # all pins released — aborted transfer's and the re-route's alike
+    assert _active_blocks(srv.engines[p]) == 0
+    _assert_conserved(srv)
+    for eng in srv.engines.values():
+        eng.kv.cache.check_invariants()

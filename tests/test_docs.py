@@ -50,3 +50,22 @@ def test_readme_mentions_policy_registry():
     readme = (REPO / "README.md").read_text()
     assert "core/policies" in readme
     assert "p2c-hedge" in readme and "budget" in readme
+    assert "disagg" in readme
+
+
+def test_architecture_doc_has_disagg_section():
+    """The disaggregated-serving section must exist and cover roles, the
+    link model, transfer accounting, failure semantics, and the
+    route-valued registry-extension note."""
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "Disaggregated prefill/decode & KV handoff" in doc
+    for needle in ("route table", "kv_bw_bps", "disagg_testbed",
+                   "EvalConfig(disaggregated=True)", "export_blocks",
+                   "prefill_only", "transfer-in-flight",
+                   'decides = "route"'):
+        assert needle in doc, f"disagg docs miss: {needle}"
+
+
+def test_benchmarks_readme_names_disagg():
+    doc = (REPO / "benchmarks" / "README.md").read_text()
+    assert "disagg.py" in doc and "split fraction" in doc

@@ -7,9 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import make_session_trace, shared_cluster
+
 from repro.cluster.monitor import ClusterMonitor
 from repro.cluster.simulator import ClusterSimulator
-from repro.cluster.spec import paper_testbed
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config, archive_init
 from repro.core.policies import get_policy, list_policies
@@ -18,10 +19,8 @@ from repro.core.router import RequestRouter
 from repro.workload.arrivals import (PhaseSpec, build_open_loop_trace,
                                      mmpp_arrivals, onoff_arrivals,
                                      poisson_arrivals)
-from repro.workload.sessions import SessionConfig, build_session_trace
-from repro.workload.slo import attach_slos
 
-CLUSTER = paper_testbed()
+CLUSTER = shared_cluster()
 
 CALM = (PhaseSpec(rate=0.4, duration=200.0, mix=(0.05, 0.05, 0.85, 0.05)),)
 STORM = (PhaseSpec(rate=8.0, duration=200.0, mix=(0.05, 0.85, 0.05, 0.05),
@@ -120,24 +119,30 @@ def test_policy_decisions_jax_match_des_oracles(policy):
     oracles' ``decide_py`` (busy slots, cache hit fractions, deadline
     contract, per-policy state) must route every request identically and
     agree on all realized metrics — for every registered policy, with the
-    prefix-cache model enabled."""
-    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
-                             seed=7, n_requests=70)
-    attach_slos(tr, tightness=2.0, seed=7)
+    prefix-cache model enabled. Route-valued policies (``decides ==
+    "route"``) run all three implementations in disaggregated mode, and the
+    per-request KV-transfer seconds must match too."""
+    tr = make_session_trace(n_requests=70, seed=7)
     pol = get_policy(policy)
     if pol.genome_spec.per_request:
         genome = np.random.default_rng(0).integers(
             0, CLUSTER.n_pairs, tr.n_requests).astype(np.int32)
     else:
         genome = pol.genome_spec.defaults
+    disagg = pol.decides == "route"
     ev = TraceEvaluator(tr, CLUSTER, EvalConfig(mode="open",
-                                                prefix_cache=True))
+                                                prefix_cache=True,
+                                                disaggregated=disagg))
     res = ev.run_policy(policy, genome)
-    sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True)
+    sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True,
+                           disaggregated=disagg)
+    fields = ("q", "cost", "rt", "ttft", "tpot", "hit")
+    if disagg:
+        fields += ("transfer",)
     for sr in (sim.run(policy=policy, genome=genome),
                sim.run_event_heap(policy=policy, genome=genome)):
         np.testing.assert_array_equal(np.asarray(res.assign), sr.assign)
-        for f in ("q", "cost", "rt", "ttft", "tpot", "hit"):
+        for f in fields:
             np.testing.assert_allclose(np.asarray(getattr(res, f)),
                                        getattr(sr, f), rtol=1e-4, atol=1e-5,
                                        err_msg=f"{policy}:{f}")

@@ -13,8 +13,8 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st  # soft optional dep
+from conftest import make_session_trace, shared_arrays, shared_cluster
 
-from repro.cluster.spec import paper_testbed
 from repro.core import nsga2 as nsga2_mod
 from repro.core.fitness import EvalConfig, TraceEvaluator, _run_trace
 from repro.core.nsga2 import NSGA2, NSGA2Config
@@ -22,20 +22,12 @@ from repro.core.policies import (PolicyInputs, get_policy, list_policies,
                                  runtime_policies)
 from repro.core.policies.budget import WINDOW_S, BudgetPolicy
 from repro.core.router import RequestRouter
-from repro.workload.sessions import SessionConfig, build_session_trace
 from repro.workload.slo import attach_slos
 from repro.workload.trace import build_trace
 
-CLUSTER = paper_testbed()
-ARRAYS = CLUSTER.to_arrays()
+CLUSTER = shared_cluster()
+ARRAYS = shared_arrays()
 REPO = Path(__file__).resolve().parent.parent
-
-
-def _session_trace(n=60, seed=1):
-    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
-                             seed=seed, n_requests=n)
-    attach_slos(tr, tightness=2.0, seed=seed)
-    return tr
 
 
 def _random_inputs(rng, n_genes_direct=32, index=None):
@@ -55,7 +47,8 @@ def _random_inputs(rng, n_genes_direct=32, index=None):
         cost=rng.uniform(0, 1e-3, n_pairs).astype(np.float32),
         prompt_cost=rng.uniform(0, 5e-4, n_pairs).astype(np.float32),
         hit_frac=rng.uniform(0, 1, n_pairs).astype(np.float32),
-        queue_len=rng.integers(0, 10, n_nodes))
+        queue_len=rng.integers(0, 10, n_nodes),
+        kv_bytes=np.float32(rng.uniform(0.0, 2e6)))
 
 
 def _random_genome(pol, rng, n_genes_direct=32):
@@ -93,7 +86,9 @@ def test_decide_jnp_matches_py_for_every_policy(policy, seed):
     got = int(pol.decide_jnp(jnp.asarray(genome), jnp_inp, ARRAYS,
                              jnp.asarray(state, jnp.float32)))
     assert want == got
-    assert 0 <= got < ARRAYS.n_pairs
+    # route-valued policies index the route table, pair-valued the pair table
+    n_out = ARRAYS.n_routes if pol.decides == "route" else ARRAYS.n_pairs
+    assert 0 <= got < n_out
 
 
 @pytest.mark.parametrize("policy", list_policies())
@@ -199,8 +194,9 @@ def test_no_policy_string_dispatch_in_consumer_layers(relpath):
 @pytest.mark.parametrize("policy", list_policies())
 def test_masked_tail_invariance_every_policy(policy):
     pol = get_policy(policy)
-    tr = _session_trace(n=50, seed=2)
-    cfg = EvalConfig(mode="open", prefix_cache=True)
+    tr = make_session_trace(n_requests=50, seed=2)
+    cfg = EvalConfig(mode="open", prefix_cache=True,
+                     disaggregated=pol.decides == "route")
     plain = TraceEvaluator(tr, CLUSTER, cfg)
     padded = TraceEvaluator(tr, CLUSTER, cfg, bucket="pow2")
     genome = _random_genome(pol, np.random.default_rng(0),
@@ -208,7 +204,7 @@ def test_masked_tail_invariance_every_policy(policy):
     a = plain.run_policy(policy, genome)
     b = padded.run_policy(policy, genome)
     assert (np.asarray(a.assign) == np.asarray(b.assign)).all()
-    for f in ("q", "cost", "rt", "ttft", "hit"):
+    for f in ("q", "cost", "rt", "ttft", "hit", "transfer"):
         np.testing.assert_allclose(np.asarray(getattr(a, f)),
                                    np.asarray(getattr(b, f)), err_msg=f)
     np.testing.assert_allclose(float(a.violation), float(b.violation))
@@ -222,7 +218,7 @@ def test_new_policies_nsga2_fit_end_to_end(policy):
     """The two policies shipped through the registry must be searchable with
     a config derived from their GenomeSpec and runnable end-to-end."""
     pol = get_policy(policy)
-    tr = _session_trace(n=48, seed=3)
+    tr = make_session_trace(n_requests=48, seed=3)
     ev = TraceEvaluator(tr, CLUSTER,
                         EvalConfig(mode="open", prefix_cache=True),
                         bucket="pow2")
@@ -256,7 +252,7 @@ def test_from_policy_derives_bounds_and_length():
 @pytest.mark.parametrize("policy", runtime_policies())
 def test_router_reoptimize_installs_registry_genome(policy):
     pol = get_policy(policy)
-    tr = _session_trace(n=64, seed=4)
+    tr = make_session_trace(n_requests=64, seed=4)
     router = RequestRouter(CLUSTER, mode=policy)
     for i, req in enumerate(tr.requests):
         d = router.route(req)
@@ -325,7 +321,7 @@ def test_budget_ledger_windows_and_resets():
 
 
 def test_budget_cap_reduces_spend_vs_loose_budget():
-    tr = _session_trace(n=80, seed=5)
+    tr = make_session_trace(n_requests=80, seed=5)
     ev = TraceEvaluator(tr, CLUSTER,
                         EvalConfig(mode="open", prefix_cache=True))
     tight = ev.run_policy("budget", [1e-4, 0.9, 3.0])
@@ -341,7 +337,7 @@ def test_des_policy_run_conserves_node_busy_time():
     node_busy_time exactly like the fixed-assignment path (the in-loop
     busy-slot probe must not clobber the accumulator)."""
     from repro.cluster.simulator import ClusterSimulator
-    tr = _session_trace(n=50, seed=8)
+    tr = make_session_trace(n_requests=50, seed=8)
     sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True)
     g = get_policy("slo").genome_spec.defaults
     by_policy = sim.run(policy="slo", genome=g)
@@ -370,7 +366,7 @@ def test_router_budget_ledger_bills_failover_pair():
 
 
 def test_p2c_spreads_load_and_is_deterministic():
-    tr = _session_trace(n=80, seed=6)
+    tr = make_session_trace(n_requests=80, seed=6)
     ev = TraceEvaluator(tr, CLUSTER,
                         EvalConfig(mode="open", prefix_cache=True))
     g = get_policy("p2c-hedge").genome_spec.defaults

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st  # soft optional dep
+from conftest import shared_arrays, shared_cluster
 
 from repro.cluster.simulator import ClusterSimulator
-from repro.cluster.spec import paper_testbed
 from repro.core import baselines
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config
@@ -20,7 +20,7 @@ from repro.core.policy import (BOUNDS_HI, BOUNDS_LO, PAPER_DEFAULTS,
 from repro.core.router import RequestRouter
 from repro.workload.trace import build_trace
 
-CLUSTER = paper_testbed()
+CLUSTER = shared_cluster()
 TRACE = build_trace(120, seed=3)
 
 
@@ -36,7 +36,7 @@ def evaluator():
 @settings(max_examples=60, deadline=None)
 def test_decide_pair_jnp_matches_python_oracle(seed):
     rng = np.random.default_rng(seed)
-    arrays = CLUSTER.to_arrays()
+    arrays = shared_arrays()
     genome = BOUNDS_LO + rng.random(6).astype(np.float32) * (BOUNDS_HI - BOUNDS_LO)
     complexity = float(rng.random())
     pred_cat = int(rng.integers(0, 3))
@@ -54,7 +54,7 @@ def test_decide_pair_jnp_matches_python_oracle(seed):
 
 
 def test_paper_default_thresholds_route_easy_to_edge():
-    arrays = CLUSTER.to_arrays()
+    arrays = shared_arrays()
     # trivially easy request, empty queues -> must go to an edge pair
     p = decide_pair_py(PAPER_DEFAULTS, complexity=0.05, pred_category=2,
                        pred_conf=0.9, queue_len=[0, 0, 0, 0], arrays=arrays)
@@ -70,7 +70,7 @@ def test_paper_default_thresholds_route_easy_to_edge():
 
 
 def test_confident_code_prediction_selects_coder_model():
-    arrays = CLUSTER.to_arrays()
+    arrays = shared_arrays()
     p = decide_pair_py(PAPER_DEFAULTS, complexity=0.1, pred_category=0,
                        pred_conf=0.95, queue_len=[0, 0, 0, 0], arrays=arrays)
     from repro.cluster.spec import MODEL_TYPE_INDEX
@@ -137,7 +137,7 @@ def test_concurrency_increases_mean_rt():
 # Baselines
 # ---------------------------------------------------------------------------
 def test_baseline_assignments_valid_and_shaped():
-    arrays = CLUSTER.to_arrays()
+    arrays = shared_arrays()
     for fn in (baselines.cloud_only, baselines.edge_only,
                baselines.round_robin):
         a = fn(TRACE, CLUSTER)
@@ -148,7 +148,7 @@ def test_baseline_assignments_valid_and_shaped():
 
 
 def test_cloud_only_all_cloud_edge_only_all_edge():
-    arrays = CLUSTER.to_arrays()
+    arrays = shared_arrays()
     is_edge = np.asarray(arrays.pair_is_edge)
     assert not is_edge[baselines.cloud_only(TRACE, CLUSTER)].any()
     assert is_edge[baselines.edge_only(TRACE, CLUSTER)].all()
@@ -156,7 +156,7 @@ def test_cloud_only_all_cloud_edge_only_all_edge():
 
 def test_round_robin_half_cloud():
     a = baselines.round_robin(TRACE, CLUSTER)
-    is_edge = np.asarray(CLUSTER.to_arrays().pair_is_edge)
+    is_edge = np.asarray(shared_arrays().pair_is_edge)
     share = is_edge[a].mean()
     assert 0.45 <= share <= 0.55
 
@@ -164,7 +164,7 @@ def test_round_robin_half_cloud():
 def test_edge_only_model_matches_task_type():
     from repro.cluster.spec import MODEL_TYPE_INDEX
     a = baselines.edge_only(TRACE, CLUSTER)
-    ptype = np.asarray(CLUSTER.to_arrays().pair_model_type)
+    ptype = np.asarray(shared_arrays().pair_model_type)
     for i in range(TRACE.n_requests):
         task = int(TRACE.task[i])
         want = {0: "coder", 1: "math", 2: "instruct", 3: "instruct"}[task]
@@ -240,7 +240,7 @@ def test_router_backup_pair_on_different_node(policy):
     router = RequestRouter(CLUSTER, PAPER_DEFAULTS, mode=policy)
     d = router.route(TRACE.requests[0], want_backup=True)
     assert d.backup_pair is not None
-    pn = np.asarray(CLUSTER.to_arrays().pair_node)
+    pn = np.asarray(shared_arrays().pair_node)
     assert pn[d.backup_pair] != d.node
 
 
@@ -250,5 +250,5 @@ def test_des_failure_injection_reroutes_to_cloud():
     res = sim.run(assign, concurrency=1,
                   down_nodes={1: (0.0, float("inf"))})
     # no request may have executed on node 1
-    pn = np.asarray(CLUSTER.to_arrays().pair_node)
+    pn = np.asarray(shared_arrays().pair_node)
     assert (pn[res.assign] != 1).all()

@@ -6,29 +6,17 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st  # soft optional dep
 
+from conftest import shared_arrays
+
 from repro.cluster.monitor import ClusterMonitor
 from repro.cluster.simulator import ClusterSimulator
-from repro.cluster.spec import paper_testbed
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.policy import (AFFINITY_DEFAULTS, SLO_DEFAULTS,
                                decide_pair_affinity_jnp,
                                decide_pair_affinity_py)
 from repro.core.router import RequestRouter
-from repro.workload.sessions import SessionConfig, build_session_trace
-from repro.workload.slo import attach_slos
 
-
-@pytest.fixture(scope="module")
-def session_trace():
-    tr = build_session_trace(SessionConfig(n_sessions=10, mean_turns=3.0),
-                             seed=3)
-    attach_slos(tr, tightness=2.0, seed=3)
-    return tr
-
-
-@pytest.fixture(scope="module")
-def cluster():
-    return paper_testbed()
+# ``session_trace`` and ``cluster`` now come from conftest.py.
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +66,7 @@ def test_session_trace_arrays_match_requests(session_trace):
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=40, deadline=None)
 def test_affinity_decision_py_jnp_agree(seed):
-    cluster = paper_testbed()
-    arrays = cluster.to_arrays()
+    arrays = shared_arrays()
     rng = np.random.default_rng(seed)
     n_pairs, n_nodes = arrays.n_pairs, arrays.n_nodes
     genome = rng.uniform([0.3, 0, 0], [1.1, 20, 4]).astype(np.float32)
