@@ -11,8 +11,9 @@ import traceback
 
 def main() -> None:
     from . import (disagg, fig2_quality, fig3_tradeoff, fig4_concurrency,
-                   hotpath, nsga2_perf, online_drift, policy_matrix,
-                   prefix_reuse, roofline, slo_attainment, table2_routing)
+                   fleet_scale, hotpath, nsga2_perf, online_drift,
+                   policy_matrix, prefix_reuse, roofline, slo_attainment,
+                   table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
@@ -23,6 +24,7 @@ def main() -> None:
                ("policy_matrix", policy_matrix),
                ("disagg", disagg),
                ("nsga2_perf", nsga2_perf),
+               ("fleet_scale", fleet_scale),
                ("hotpath", hotpath),
                ("roofline", roofline)]
     failures = 0

@@ -25,6 +25,8 @@ import dataclasses
 import time
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class NodeStats:
@@ -59,6 +61,11 @@ class ClusterMonitor:
         self.stats: Dict[int, NodeStats] = {
             j: NodeStats(last_heartbeat=now) for j in range(n_nodes)}
         self.heartbeat_timeout = heartbeat_timeout
+        # fleet counters: per-node emitted-token / retired-slot totals fed in
+        # one vectorized update per cohort dispatch from the stacked
+        # (member, n, 3, B) chunk output — no per-engine host pulls
+        self.fleet_emitted = np.zeros(n_nodes, np.int64)
+        self.fleet_retired = np.zeros(n_nodes, np.int64)
 
     # -- data plane callbacks -------------------------------------------------
     def on_dispatch(self, node: int) -> None:
@@ -88,6 +95,22 @@ class ClusterMonitor:
         s = self.stats[node]
         s.outstanding = max(0, s.outstanding - 1)
         s.total_cancelled += 1
+
+    def record_fleet(self, nodes, emitted, retired) -> None:
+        """Accumulate per-node decode progress from one cohort dispatch.
+
+        ``nodes``/``emitted``/``retired`` are parallel arrays over the
+        cohort's members (a node hosting several member engines accumulates
+        via ``np.add.at``). Called once per stacked dispatch — the fleet
+        counterpart of per-request ``on_complete`` accounting."""
+        np.add.at(self.fleet_emitted, np.asarray(nodes, np.int64),
+                  np.asarray(emitted, np.int64))
+        np.add.at(self.fleet_retired, np.asarray(nodes, np.int64),
+                  np.asarray(retired, np.int64))
+
+    def fleet_totals(self) -> Dict[str, int]:
+        return {"emitted": int(self.fleet_emitted.sum()),
+                "retired": int(self.fleet_retired.sum())}
 
     def heartbeat(self, node: int, now: Optional[float] = None) -> None:
         s = self.stats[node]

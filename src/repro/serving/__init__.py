@@ -1,6 +1,9 @@
 from .engine import EngineConfig, LLMEngine
-from .kvcache import BlockPool, PagedKVCache, PagedKVStore, RadixIndex
+from .fleet import Cohort, FleetState, build_cohorts
+from .kvcache import (BlockPool, FleetKVPools, PagedKVCache, PagedKVStore,
+                      RadixIndex)
 from .scheduler import ClusterServer, ServeRequest
 
 __all__ = ["LLMEngine", "EngineConfig", "ClusterServer", "ServeRequest",
-           "BlockPool", "RadixIndex", "PagedKVCache", "PagedKVStore"]
+           "BlockPool", "RadixIndex", "PagedKVCache", "PagedKVStore",
+           "Cohort", "FleetState", "FleetKVPools", "build_cohorts"]

@@ -45,6 +45,7 @@ import numpy as np
 
 from ..models import lm
 from ..models.config import ModelConfig
+from .fleet import ChunkWork, FleetMemberStore, decode_chunk_body
 from .kvcache import CacheStats, PagedKVStore
 
 # ---------------------------------------------------------------------------
@@ -87,25 +88,12 @@ def _decode_chunk(params, cfg: ModelConfig, tok, cache, budget, alive,
     decoding garbage that nothing reads — so the chunk is bit-identical to
     ``n`` single steps when no admission happens in between. Emits one
     stacked (n, 3, B) int32 tensor (token, emitted-this-iter, retired-this-
-    iter) so the caller needs a single device->host transfer per chunk."""
+    iter) so the caller needs a single device->host transfer per chunk.
 
-    def body(carry, _):
-        tok, cache, budget, alive = carry
-        logits, cache = lm.decode_step(params, cfg, tok, cache)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        emit = alive
-        budget = budget - alive.astype(jnp.int32)
-        retire = alive & ((budget <= 0) | (nxt == eos))
-        alive = alive & ~retire
-        cache = cache._replace(kv_len=jnp.where(retire, 0, cache.kv_len))
-        tok = jnp.where(retire, 0, nxt)[:, None]
-        out = jnp.stack([nxt, emit.astype(jnp.int32),
-                         retire.astype(jnp.int32)])
-        return (tok, cache, budget, alive), out
-
-    (tok, cache, budget, alive), outs = jax.lax.scan(
-        body, (tok, cache, budget, alive), None, length=n)
-    return tok, cache, outs
+    The scan body lives in ``serving.fleet.decode_chunk_body`` — the same
+    code is vmapped over a node axis by ``fleet._cohort_decode_chunk`` so a
+    whole cohort of engines decodes in one dispatch."""
+    return decode_chunk_body(params, cfg, tok, cache, budget, alive, n, eos)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,19 +119,36 @@ class _Slot:
     block_ids: List[int] = dataclasses.field(default_factory=list)
 
 
+class _LocalStore:
+    """Engine-local device state (the standalone, non-fleet backing)."""
+
+    __slots__ = ("cache", "next_token")
+
+    def __init__(self, cache, next_token):
+        self.cache = cache
+        self.next_token = next_token
+
+
 class LLMEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         B = ecfg.max_slots
-        self.cache = lm.make_cache(cfg, B, ecfg.max_seq)
+        # device state lives behind a store: engine-local arrays until a
+        # fleet Cohort adopts this engine, a member view into the cohort's
+        # stacked node-axis pytree afterwards (serving.fleet). The control
+        # plane below never knows the difference.
+        self._store = _LocalStore(lm.make_cache(cfg, B, ecfg.max_seq),
+                                  jnp.zeros((B, 1), jnp.int32))
+        self._fleet = None   # (Cohort, member index) once adopted
         self.slots = [_Slot() for _ in range(B)]
         self.queue: deque = deque()
         self.results: Dict[int, dict] = {}
-        self._next_token = jnp.zeros((B, 1), jnp.int32)
         self._steps = 0
         self.host_syncs = 0   # device->host transfer count (decode path)
+        self.decode_dispatches = 0   # jitted decode calls issued by THIS engine
+        self.tokens_emitted = 0
         # bucketed prefill is exact only for pure-attention dense patterns:
         # recurrent mixers integrate padding tokens into their state, and
         # MoE capacity (GShard-style drop) lets padding tokens displace
@@ -154,6 +159,52 @@ class LLMEngine:
         self.kv: Optional[PagedKVStore] = (
             PagedKVStore(cfg, ecfg.cache_blocks, ecfg.block_size)
             if ecfg.prefix_cache else None)
+
+    # -- device-state views (local or fleet-backed) ---------------------------
+    @property
+    def cache(self):
+        return self._store.cache
+
+    @cache.setter
+    def cache(self, value):
+        self._store.cache = value
+
+    @property
+    def _next_token(self):
+        return self._store.next_token
+
+    @_next_token.setter
+    def _next_token(self, value):
+        self._store.next_token = value
+
+    @property
+    def fleet_ok(self) -> bool:
+        """Fleet vectorization is exact only when batch rows are independent:
+        a cohort dispatch may overrun a member's committed iterations
+        (``n_f > n_eff``), mutating dead-slot rows the per-engine path never
+        touched — invisible unless MoE expert capacity couples rows."""
+        return all(f != "moe" for _, f in self.cfg.pattern)
+
+    def _attach_fleet(self, cohort, member: int) -> None:
+        """Adopt this engine into a fleet cohort: device state moves into
+        the cohort's stacked pytree (the cohort stacks it before calling
+        this) and all reads/writes go through a member view."""
+        self._fleet = (cohort, member)
+        self._store = FleetMemberStore(cohort, member)
+        if self.kv is not None and cohort.kv_pools is not None:
+            # Cohort construction stacks the members' pools itself
+            # (FleetKVPools.stack attaches them); a flushed store re-attaches
+            # through flush_kv instead.
+            pass
+        self._sync_fleet_counters()
+
+    def _sync_fleet_counters(self) -> None:
+        if self._fleet is None:
+            return
+        cohort, m = self._fleet
+        cohort.counters.active[m] = sum(
+            s.request_id is not None for s in self.slots)
+        cohort.counters.queued[m] = len(self.queue)
 
     def _decode(self, params, tok, cache):
         return _decode_one(params, self.cfg, tok, cache)
@@ -166,6 +217,7 @@ class LLMEngine:
                            max_new_tokens or self.ecfg.max_new_tokens,
                            extra or {}, self._steps))
         self._admit()
+        self._sync_fleet_counters()
 
     def step(self) -> List[int]:
         """One decode iteration for all active slots. Returns retired ids."""
@@ -177,6 +229,7 @@ class LLMEngine:
                                           self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.host_syncs += 1
+        self.decode_dispatches += 1
         self._next_token = jnp.asarray(nxt[:, None])
         retired = []
         for i in active:
@@ -184,6 +237,7 @@ class LLMEngine:
             tok = int(nxt[i])
             s.generated.append(tok)
             s.budget -= 1
+            self.tokens_emitted += 1
             if s.budget <= 0 or tok == self.ecfg.eos_token:
                 self.results[s.request_id] = self._result(s, self._steps + 1)
                 retired.append(s.request_id)
@@ -225,15 +279,28 @@ class LLMEngine:
         self.cache = cache
         outs = np.asarray(outs)               # (n_eff, 3, B) — one transfer
         self.host_syncs += 1
-        toks, emits, retires = outs[:, 0], outs[:, 1], outs[:, 2]
+        self.decode_dispatches += 1
+        return self._commit_chunk(ChunkWork(outs=outs, n_eff=n_eff,
+                                            active=tuple(active)))
+
+    def _commit_chunk(self, work: ChunkWork) -> List[int]:
+        """Host-side half of a fused decode chunk: token append, budget and
+        retirement bookkeeping for ``work.n_eff`` iterations. Shared by
+        ``step_n`` (engine-local chunk) and ``fleet.Cohort.dispatch`` (this
+        engine's slice of a whole-cohort chunk — the device state was
+        already advanced in the stacked dispatch, so only the books move
+        here). Admits queued work into freed slots exactly like ``step``."""
+        toks, emits, retires = (work.outs[:, 0], work.outs[:, 1],
+                                work.outs[:, 2])
         retired: List[int] = []
-        for t in range(n_eff):
-            for i in active:
+        for t in range(work.n_eff):
+            for i in work.active:
                 if not emits[t, i]:
                     continue
                 s = self.slots[i]
                 s.generated.append(int(toks[t, i]))
                 s.budget -= 1
+                self.tokens_emitted += 1
                 if retires[t, i]:
                     self.results[s.request_id] = self._result(
                         s, self._steps + t + 1)
@@ -241,7 +308,7 @@ class LLMEngine:
                     # device-side state (kv_len, next token) was already
                     # released inside the chunk
                     self._release_slot_host(i)
-        self._steps += n_eff
+        self._steps += work.n_eff
         if retired:
             self._admit()
         return retired
@@ -352,10 +419,12 @@ class LLMEngine:
             if s.request_id == request_id:
                 self._release_slot(i)
                 self._admit()
+                self._sync_fleet_counters()
                 return True
         for k, item in enumerate(self.queue):
             if item[0] == request_id:
                 del self.queue[k]
+                self._sync_fleet_counters()
                 return True
         return False
 
@@ -398,6 +467,12 @@ class LLMEngine:
             s.block_ids = []
         self.kv = PagedKVStore(self.cfg, self.ecfg.cache_blocks,
                                self.ecfg.block_size)
+        if self._fleet is not None:
+            cohort, m = self._fleet
+            if cohort.kv_pools is not None:
+                # re-home the fresh store onto this member's slab slice
+                # (copying the fresh zeros wipes the dead pool's bytes too)
+                self.kv.attach(cohort.kv_pools, m)
 
     # -- internals -------------------------------------------------------------
     def _release_slot_host(self, i: int) -> None:
@@ -408,6 +483,7 @@ class LLMEngine:
         if self.kv is not None and s.block_ids:
             self.kv.cache.release(s.block_ids)
         self.slots[i] = _Slot()
+        self._sync_fleet_counters()
 
     def _release_slot(self, i: int) -> None:
         """Retire/cancel slot ``i``: drop its KV-block references and zero its
@@ -444,11 +520,12 @@ class LLMEngine:
         while self.queue:
             free = [i for i, s in enumerate(self.slots) if s.request_id is None]
             if not free:
-                return
+                break
             i = free[0]
             request_id, tokens, budget, extra, submit_step = self.queue.popleft()
             self._prefill_into(i, request_id, tokens, budget, extra,
                                submit_step)
+        self._sync_fleet_counters()
 
     def _bucket_len(self, n: int) -> int:
         """Smallest prefill-bucket multiple >= n, capped at max_seq."""

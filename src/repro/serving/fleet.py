@@ -1,0 +1,374 @@
+"""Fleet-vectorized device data plane: decode a whole cohort in one dispatch.
+
+``ClusterServer`` used to advance N ``LLMEngine``s in a Python loop — one
+device dispatch (or fused ``step_n`` chunk) per engine per tick, the hard
+ceiling on simulated fleet scale. This module stacks per-engine device state
+(decode caches, slot next-token arrays) into a single pytree with a leading
+**node axis** and ``vmap``s the fused decode chunk of PR 4 over that axis, so
+every engine in a **cohort** — engines sharing an identical
+``(ModelConfig, EngineConfig, params)`` triple — advances in ONE jitted
+dispatch per chunk with ONE stacked ``(member, n, 3, B)`` host transfer.
+
+Split of responsibilities (the host/device contract):
+
+* **device data plane (here)** — ``FleetState`` (stacked ``lm.Cache`` +
+  next-token array), ``decode_chunk_body`` (the un-jitted scan shared with
+  ``engine._decode_chunk``), and the module-level ``_cohort_decode_chunk``
+  jit keyed on the shared static config. A dispatch gathers only the
+  **participating** members — their rows are indexed out inside the jit at
+  a power-of-two-padded participant count (the PR 4 bucketing idiom, so the
+  drain tail of a replay costs O(participants), not O(members)) — runs the
+  vmapped chunk on that sub-fleet, and scatters the survivors back; a
+  skipped member's device state never advances.
+* **host control plane (``engine.LLMEngine``)** — admission, continuous
+  batching, prefix-cache matching and result accounting are unchanged; a
+  fleet-adopted engine simply reads and writes its device state through a
+  member view into the stacked arrays (``FleetMemberStore``). The view is
+  **write-back**: reads gather the member's slice once per dispatch epoch
+  (one jitted call), writes land host-side and are flushed into the stacked
+  pytree at most once per member per dispatch — an admission no longer pays
+  a whole-fleet copy per slot write.
+
+Byte-identity: a cohort dispatch runs ``n_f = max`` over the participating
+members' clipped chunk lengths, but each member commits only its own
+``n_eff`` iterations host-side — device state past a member's ``n_eff``
+touches only slots that are already dead (all ops are row-independent for
+the no-MoE patterns ``LLMEngine.fleet_ok`` admits), and admission rewrites a
+slot's rows wholesale, so fleet stepping reproduces per-engine ``step()`` /
+``step_n()`` bit-for-bit. ``tests/test_fleet.py`` enforces this across every
+registered routing policy, disaggregated KV handoffs and node failures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+from .kvcache import FleetKVPools
+
+
+class FleetState(NamedTuple):
+    """Stacked device state for one cohort: every leaf carries a leading
+    member (node) axis."""
+
+    cache: object          # lm.Cache, leaves (M, ...)
+    next_token: jnp.ndarray  # (M, B, 1)
+
+
+def decode_chunk_body(params, cfg: ModelConfig, tok, cache, budget, alive,
+                      n: int, eos: int):
+    """``n`` fused decode iterations with device-side retirement (un-jitted).
+
+    The single source of truth for the chunk state evolution: jitted
+    per-engine as ``engine._decode_chunk`` and vmapped over the member axis
+    by ``_cohort_decode_chunk``. Mirrors ``LLMEngine.step`` exactly: every
+    iteration decodes all slots, budgets decrement for live slots, a live
+    slot retires on exhausted budget or EOS (its ``kv_len`` zeroes and its
+    next token resets, exactly like ``_release_slot``), and already-dead
+    slots keep decoding garbage that nothing reads. Emits one stacked
+    (n, 3, B) int32 tensor (token, emitted-this-iter, retired-this-iter)."""
+
+    def body(carry, _):
+        tok, cache, budget, alive = carry
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        emit = alive
+        budget = budget - alive.astype(jnp.int32)
+        retire = alive & ((budget <= 0) | (nxt == eos))
+        alive = alive & ~retire
+        cache = cache._replace(kv_len=jnp.where(retire, 0, cache.kv_len))
+        tok = jnp.where(retire, 0, nxt)[:, None]
+        out = jnp.stack([nxt, emit.astype(jnp.int32),
+                         retire.astype(jnp.int32)])
+        return (tok, cache, budget, alive), out
+
+    (tok, cache, budget, alive), outs = jax.lax.scan(
+        body, (tok, cache, budget, alive), None, length=n)
+    return tok, cache, outs
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "eos"))
+def _cohort_decode_chunk(params, cfg: ModelConfig, state: FleetState,
+                         budget, alive, idx, valid, n: int, eos: int):
+    """One dispatch for a cohort's participating members: gather the rows
+    named by ``idx`` out of the stacked state, ``decode_chunk_body`` vmapped
+    over that sub-fleet, scatter the valid rows back.
+
+    ``budget``/``alive`` are (K, B) for the K-row participant bucket;
+    ``idx`` is (K,) **unique** member rows (participants first, padded to a
+    power of two with distinct idle members so the scatter stays
+    deterministic) and ``valid`` the (K,) mask of real participants —
+    padding rows write their gathered pre-dispatch values straight back, so
+    only participants advance. Keyed on the shared static ``(cfg, n, eos)``
+    — every cohort with the same model identity, member count and bucket
+    size reuses one executable."""
+    sub = jax.tree.map(lambda a: a[idx], state)
+    tok, cache, outs = jax.vmap(
+        lambda t, c, b, a: decode_chunk_body(params, cfg, t, c, b, a, n, eos),
+        in_axes=(0, 0, 0, 0))(sub.next_token, sub.cache, budget, alive)
+
+    def merge(full, new, old):
+        mask = valid.reshape(valid.shape + (1,) * (new.ndim - 1))
+        return full.at[idx].set(jnp.where(mask, new, old))
+
+    new_state = FleetState(
+        cache=jax.tree.map(merge, state.cache, cache, sub.cache),
+        next_token=merge(state.next_token, tok, sub.next_token))
+    return new_state, outs
+
+
+@jax.jit
+def _member_gather(state: FleetState, m):
+    """One member's slice of the stacked state — ONE jitted call for the
+    whole pytree (an eager per-leaf gather costs ~a millisecond of Python
+    per read on the admission hot path)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, m, 0, keepdims=False),
+        state)
+
+
+@jax.jit
+def _member_scatter(state: FleetState, local: FleetState, m):
+    """Write one member's slice back into the stacked state (one jitted
+    call; traced member index, so every member shares one executable)."""
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_index_in_dim(
+            full, one, m, 0), state, local)
+
+
+class FleetMemberStore:
+    """One engine's **write-back** view into a cohort's stacked device state.
+
+    Drop-in replacement for the engine-local store. Reads gather the
+    member's slice once per dispatch epoch (one jitted call) and serve
+    repeats from the host-held local copy; writes land in the local copy and
+    mark the member dirty — the cohort flushes every dirty member into the
+    stacked pytree right before its next dispatch (``Cohort._flush``), so an
+    admission's slot writes cost O(member slice), not O(whole fleet). The
+    control plane keeps its exact per-engine semantics while the
+    authoritative bytes live in the fleet pytree."""
+
+    def __init__(self, cohort: "Cohort", member: int):
+        self._cohort = cohort
+        self._member = member
+        self._local: Optional[FleetState] = None   # member slice, write-back
+        self._epoch = -1
+
+    def _fresh(self) -> FleetState:
+        c = self._cohort
+        if self._local is None or self._epoch != c.epoch:
+            self._local = _member_gather(c.state, jnp.int32(self._member))
+            self._epoch = c.epoch
+        return self._local
+
+    @property
+    def cache(self):
+        return self._fresh().cache
+
+    @cache.setter
+    def cache(self, value):
+        self._local = self._fresh()._replace(cache=value)
+        self._cohort._dirty.add(self._member)
+
+    @property
+    def next_token(self):
+        return self._fresh().next_token
+
+    @next_token.setter
+    def next_token(self, value):
+        self._local = self._fresh()._replace(next_token=value)
+        self._cohort._dirty.add(self._member)
+
+
+class ChunkWork(NamedTuple):
+    """One member's share of a decode chunk, ready for host commit."""
+
+    outs: np.ndarray     # (n_f, 3, B) host array (token, emitted, retired)
+    n_eff: int           # iterations this member actually commits
+    active: Sequence[int]  # slots active at dispatch time
+
+
+class CohortCounters:
+    """Vectorized per-member fleet counters (numpy, host-side).
+
+    ``active``/``queued`` mirror each member engine's slot/queue occupancy
+    (synced by the engine on every mutation), so ``ClusterServer`` can
+    aggregate load without a Python loop over engines. ``emitted``/
+    ``retired`` accumulate from the stacked chunk outputs — one vectorized
+    sum per dispatch, no per-engine host pulls."""
+
+    def __init__(self, n_members: int):
+        self.active = np.zeros(n_members, np.int64)
+        self.queued = np.zeros(n_members, np.int64)
+        self.emitted = np.zeros(n_members, np.int64)
+        self.retired = np.zeros(n_members, np.int64)
+        self.dispatches = 0
+
+
+class CohortDispatch(NamedTuple):
+    """Result of one cohort decode dispatch."""
+
+    work: Dict[int, ChunkWork]   # member -> commit work (empty: no dispatch)
+    emitted: np.ndarray          # (M,) tokens emitted this chunk, per member
+    retired: np.ndarray          # (M,) slots retired this chunk, per member
+
+
+class Cohort:
+    """A group of engines sharing one (ModelConfig, EngineConfig, params)
+    identity whose device state is stacked into a single ``FleetState``.
+
+    Adoption re-homes each engine's decode cache, next-token array and (when
+    paged prefix reuse is on) K/V pools into stacked arrays with a leading
+    member axis; the engines keep operating on views (``FleetMemberStore``).
+    ``dispatch`` advances every participating member in one jitted call."""
+
+    def __init__(self, engines: Sequence):
+        assert engines, "a cohort needs at least one engine"
+        e0 = engines[0]
+        self.cfg = e0.cfg
+        self.ecfg = e0.ecfg
+        self.params = e0.params
+        for e in engines[1:]:
+            assert e.cfg == self.cfg and e.ecfg == self.ecfg, \
+                "cohort members must share (ModelConfig, EngineConfig)"
+            assert e.params is self.params, \
+                "cohort members must share one params pytree"
+            assert e.fleet_ok, "engine pattern is not fleet-vectorizable"
+        self.members = list(engines)
+        M = len(self.members)
+        stack = lambda *xs: jnp.stack(xs)
+        self.state = FleetState(
+            cache=jax.tree.map(stack, *[e.cache for e in self.members]),
+            next_token=jnp.stack([e._next_token for e in self.members]))
+        self.kv_pools: Optional[FleetKVPools] = None
+        if self.ecfg.prefix_cache and all(e.kv is not None
+                                          for e in self.members):
+            self.kv_pools = FleetKVPools.stack([e.kv for e in self.members])
+        self.counters = CohortCounters(M)
+        self.host_syncs = 0   # one stacked device->host transfer per dispatch
+        self.epoch = 0        # bumps per dispatch: invalidates member views
+        self._dirty: set = set()   # members with unflushed local writes
+        for m, eng in enumerate(self.members):
+            eng._attach_fleet(self, m)
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def _flush(self) -> None:
+        """Write every dirty member's local slice into the stacked state —
+        at most one jitted scatter per member per dispatch, however many
+        slot writes its admissions made since the last one."""
+        for m in sorted(self._dirty):
+            self.state = _member_scatter(self.state,
+                                         self.members[m]._store._local,
+                                         jnp.int32(m))
+        self._dirty.clear()
+
+    def dispatch(self, n: int, eligible: Sequence[int]) -> CohortDispatch:
+        """One vmapped decode chunk for every participating member.
+
+        ``eligible`` pre-filters members (the scheduler drops crashed
+        nodes); participation additionally requires active slots and — for
+        ``n > 1``, mirroring ``step_n``'s fallback — an empty admission
+        queue, so chunking never skips a mid-chunk admission a per-engine
+        ``step()`` would have run. The participant rows are gathered inside
+        the jit at a power-of-two-padded bucket size, so a near-idle tick
+        (the drain tail of a replay) costs O(participants) decode compute,
+        not O(members). Returns per-member ``ChunkWork`` for the host commit
+        plus vectorized emit/retire counts straight off the stacked
+        (bucket, n, 3, B) output — the single transfer for the whole
+        cohort."""
+        n = max(int(n), 1)
+        work_slots: Dict[int, List[int]] = {}
+        for m in eligible:
+            eng = self.members[m]
+            if n > 1 and eng.queue:
+                continue   # step_n would fall back: keep per-engine semantics
+            active = [i for i, s in enumerate(eng.slots)
+                      if s.request_id is not None]
+            if active:
+                work_slots[m] = active
+        M = len(self.members)
+        zero = np.zeros(M, np.int64)
+        if not work_slots:
+            return CohortDispatch({}, zero, zero)
+        self._flush()
+        B = self.ecfg.max_slots
+        parts = sorted(work_slots)
+        k = len(parts)
+        k_b = min(1 << (k - 1).bit_length(), M)   # pow2 bucket, capped at M
+        pads = [m for m in range(M) if m not in work_slots][:k_b - k]
+        idx = np.asarray(parts + pads, np.int32)
+        valid = np.zeros(k_b, bool)
+        valid[:k] = True
+        budgets = np.zeros((k_b, B), np.int32)
+        alive = np.zeros((k_b, B), bool)
+        n_eff: Dict[int, int] = {}
+        for r, m in enumerate(parts):
+            for i in work_slots[m]:
+                s = self.members[m].slots[i]
+                budgets[r, i] = s.budget
+                alive[r, i] = True
+            n_eff[m] = min(n, int(budgets[r, alive[r]].max()))
+        n_f = max(n_eff.values())
+        self.state, outs = _cohort_decode_chunk(
+            self.params, self.cfg, self.state, jnp.asarray(budgets),
+            jnp.asarray(alive), jnp.asarray(idx), jnp.asarray(valid), n_f,
+            self.ecfg.eos_token)
+        self.epoch += 1
+        # non-participants' stacked rows are untouched: their (flushed)
+        # local views stay valid across the epoch bump, so an idle member
+        # never re-gathers; participants re-gather lazily on next read
+        changed = set(parts)
+        for m, eng in enumerate(self.members):
+            st = eng._store
+            if m not in changed and st._local is not None \
+                    and st._epoch == self.epoch - 1:
+                st._epoch = self.epoch
+        outs_np = np.asarray(outs)        # ONE transfer for the whole cohort
+        self.host_syncs += 1
+        self.counters.dispatches += 1
+        # fleet counters straight from the stacked emit/retire masks: rows
+        # past a member's n_eff are all-dead (emit == retire == 0), padding
+        # rows all-idle, so the vectorized sum is exact
+        emitted = np.zeros(M, np.int64)
+        retired = np.zeros(M, np.int64)
+        emitted[parts] = outs_np[:k, :, 1, :].sum(axis=(1, 2))
+        retired[parts] = outs_np[:k, :, 2, :].sum(axis=(1, 2))
+        self.counters.emitted += emitted
+        self.counters.retired += retired
+        work = {m: ChunkWork(outs=outs_np[r], n_eff=n_eff[m],
+                             active=tuple(work_slots[m]))
+                for r, m in enumerate(parts)}
+        return CohortDispatch(work, emitted, retired)
+
+
+def build_cohorts(engines: Dict[int, object]):
+    """Group engines into cohorts by shared (ModelConfig, EngineConfig,
+    params-identity); non-vectorizable engines (MoE patterns) stay loose.
+
+    Returns ``(cohorts, cohort_pairs, pair_to_cohort)`` where
+    ``cohort_pairs[c]`` lists the pair ids of cohort ``c`` in pair order and
+    ``pair_to_cohort`` maps pair id -> (cohort index, member index)."""
+    groups: Dict[tuple, List[int]] = {}
+    for pair in sorted(engines):
+        eng = engines[pair]
+        if not eng.fleet_ok:
+            continue
+        key = (eng.cfg, eng.ecfg, id(eng.params))
+        groups.setdefault(key, []).append(pair)
+    cohorts: List[Cohort] = []
+    cohort_pairs: List[List[int]] = []
+    pair_to_cohort: Dict[int, tuple] = {}
+    for pairs in groups.values():
+        c = len(cohorts)
+        cohorts.append(Cohort([engines[p] for p in pairs]))
+        cohort_pairs.append(pairs)
+        for m, p in enumerate(pairs):
+            pair_to_cohort[p] = (c, m)
+    return cohorts, cohort_pairs, pair_to_cohort

@@ -294,8 +294,55 @@ class PagedKVStore:
         self.block_size = block_size
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         shp = (cfg.n_periods, n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
-        self.pools: List[Tuple[jnp.ndarray, jnp.ndarray]] = [
-            (jnp.zeros(shp, dt), jnp.zeros(shp, dt)) for _ in cfg.pattern]
+        self._local_pools: Optional[List[Tuple[jnp.ndarray, jnp.ndarray]]] = \
+            [(jnp.zeros(shp, dt), jnp.zeros(shp, dt)) for _ in cfg.pattern]
+        # fleet adoption (serving.fleet): when set, the physical bytes live
+        # in a cohort-wide FleetKVPools slab and this store is a member view
+        self._fleet: Optional["FleetKVPools"] = None
+        self._member = 0
+
+    @property
+    def pools(self) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Per-pattern-position (k, v) pools for THIS store — local arrays,
+        or this member's slice of the cohort's node-axis stacked slab."""
+        if self._fleet is None:
+            return self._local_pools
+        m = self._member
+        return [(k[m], v[m]) for k, v in self._fleet.pools]
+
+    def attach(self, fleet: "FleetKVPools", member: int,
+               copy: bool = True) -> None:
+        """Re-home this store's physical bytes into slot ``member`` of a
+        cohort slab. ``copy=True`` writes the current local pool contents
+        into the slab (a fresh/flushed store zeroes its slot); the stacking
+        constructor passes ``copy=False`` because the slab was built from
+        the members' pools directly. The logical cache (block pool, radix
+        index, refcounts) stays per-engine — only the bytes are stacked."""
+        if copy:
+            for pos, (k, v) in enumerate(self._local_pools):
+                fk, fv = fleet.pools[pos]
+                fleet.pools[pos] = (fk.at[member].set(k),
+                                    fv.at[member].set(v))
+        self._fleet, self._member = fleet, member
+        self._local_pools = None
+
+    def _update_pool(self, pos: int, ids, k_slab, v_slab) -> None:
+        """Write ``(P, n, bs, H, D)`` slabs at physical block ids ``ids`` —
+        one batched index update on the local pool, or on this member's row
+        of the fleet slab."""
+        if self._fleet is None:
+            k, v = self._local_pools[pos]
+            self._local_pools[pos] = (k.at[:, ids].set(k_slab),
+                                      v.at[:, ids].set(v_slab))
+        else:
+            # mixed scalar+slice+array indexing moves the block axis first:
+            # fk[m, :, ids] has shape (n, P, bs, H, D), so swap the slab's
+            # (P, n, ...) leading axes to match
+            m = self._member
+            fk, fv = self._fleet.pools[pos]
+            self._fleet.pools[pos] = (
+                fk.at[m, :, ids].set(jnp.moveaxis(k_slab, 1, 0)),
+                fv.at[m, :, ids].set(jnp.moveaxis(v_slab, 1, 0)))
 
     def gather(self, blocks: Sequence[int], pad_to: Optional[int] = None):
         """Prefix K/V for ``models.lm.prefill_extend``: tuple over pattern
@@ -337,11 +384,10 @@ class PagedKVStore:
         ids ``blocks`` (the decode-side half of a KV handoff) — one batched
         index update per pool, mirroring :meth:`scatter`."""
         ids = jnp.asarray(list(blocks), jnp.int32)
+        dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
         for pos, (k_slab, v_slab) in enumerate(slabs):
-            k_pool, v_pool = self.pools[pos]
-            self.pools[pos] = (
-                k_pool.at[:, ids].set(jnp.asarray(k_slab, k_pool.dtype)),
-                v_pool.at[:, ids].set(jnp.asarray(v_slab, v_pool.dtype)))
+            self._update_pool(pos, ids, jnp.asarray(k_slab, dt),
+                              jnp.asarray(v_slab, dt))
 
     def scatter(self, blocks: Sequence[int], start_block: int, layer_cache):
         """Write whole blocks ``start_block..`` of a single-request prefill
@@ -360,6 +406,37 @@ class PagedKVStore:
             return seg.reshape(P, n, bs, H, D)
 
         for pos, (k_full, v_full) in enumerate(layer_cache):
-            k_pool, v_pool = self.pools[pos]
-            self.pools[pos] = (k_pool.at[:, ids].set(slab(k_full)),
-                               v_pool.at[:, ids].set(slab(v_full)))
+            self._update_pool(pos, ids, slab(k_full), slab(v_full))
+
+
+class FleetKVPools:
+    """Node-axis stacked K/V pools shared by a fleet cohort.
+
+    One ``(k, v)`` pair per pattern position, each of shape
+    ``(n_members, n_periods, n_blocks, block_size, n_kv_heads, head_dim)`` —
+    the fleet-stacked counterpart of :class:`PagedKVStore.pools`. Block
+    allocation, refcounts and the radix index stay per-engine (host
+    control-plane state); only the physical bytes are stacked, and every
+    member store reads/writes its own leading-axis slice, so export/import
+    stay unchanged at the block level."""
+
+    def __init__(self, cfg: ModelConfig, n_members: int, n_blocks: int,
+                 block_size: int):
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        shp = (n_members, cfg.n_periods, n_blocks, block_size,
+               cfg.n_kv_heads, cfg.hd)
+        self.pools: List[Tuple[jnp.ndarray, jnp.ndarray]] = [
+            (jnp.zeros(shp, dt), jnp.zeros(shp, dt)) for _ in cfg.pattern]
+
+    @classmethod
+    def stack(cls, stores: Sequence[PagedKVStore]) -> "FleetKVPools":
+        """Stack member stores' pools into one slab and re-home every store
+        onto its slice (adoption path — no extra copy beyond the stack)."""
+        self = cls.__new__(cls)
+        self.pools = [
+            (jnp.stack([s.pools[pos][0] for s in stores]),
+             jnp.stack([s.pools[pos][1] for s in stores]))
+            for pos in range(len(stores[0].pools))]
+        for m, s in enumerate(stores):
+            s.attach(self, m, copy=False)
+        return self

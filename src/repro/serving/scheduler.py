@@ -46,6 +46,7 @@ from ..models import lm
 from ..workload.datasets import Request
 from ..workload.tokenizer import count_tokens
 from .engine import EngineConfig, LLMEngine
+from .fleet import Cohort, build_cohorts
 
 
 @dataclasses.dataclass
@@ -61,6 +62,7 @@ class _Flight:
     pair: int
     iters: int = 0
     hedge_pair: Optional[int] = None
+    depart_tick: int = 0   # scheduler tick of the (original) dispatch
 
 
 @dataclasses.dataclass
@@ -88,10 +90,14 @@ class ClusterServer:
                  thresholds, engine_cfg: EngineConfig = EngineConfig(),
                  hedge_after: int = 64, vocab_cap: Optional[int] = None,
                  router_kwargs: Optional[dict] = None,
-                 tick_seconds: float = 0.05):
+                 tick_seconds: float = 0.05, fleet: bool = True):
         """model_builders: model name -> (ModelConfig, params).
         router_kwargs: extra RequestRouter arguments (e.g.
-        ``mode="affinity"`` for cache-affinity dispatch)."""
+        ``mode="affinity"`` for cache-affinity dispatch).
+        fleet: stack engines sharing a (ModelConfig, EngineConfig, params)
+        identity into cohorts (``serving.fleet``) so each cohort decodes in
+        ONE jitted dispatch per tick; ``False`` keeps the per-engine Python
+        loop (byte-identical results, O(#engines) dispatches)."""
         self.cluster = cluster
         self.monitor = ClusterMonitor(len(cluster.nodes))
         self.router = RequestRouter(cluster, thresholds, monitor=self.monitor,
@@ -103,6 +109,18 @@ class ClusterServer:
             mcfg, params = model_builders[name]
             self.engines[p] = LLMEngine(mcfg, params, engine_cfg)
             self.pair_model_cfg[p] = mcfg
+        self.fleet = fleet
+        self._cohorts: List[Cohort] = []
+        self._cohort_pairs: List[List[int]] = []
+        self._pair_cohort: Dict[int, tuple] = {}
+        self._cohort_nodes: List[np.ndarray] = []
+        if fleet:
+            self._cohorts, self._cohort_pairs, self._pair_cohort = \
+                build_cohorts(self.engines)
+            pair_node = np.asarray(self.router.arrays.pair_node)
+            self._cohort_nodes = [
+                np.asarray([pair_node[p] for p in pairs], np.int64)
+                for pairs in self._cohort_pairs]
         self.inflight: Dict[int, _Flight] = {}
         self.transfers: Dict[int, _Transfer] = {}   # KV handoffs in flight
         self.done: Dict[int, dict] = {}
@@ -208,7 +226,8 @@ class ClusterServer:
         self._dispatch(sreq, decision.pair)
         self.inflight[sreq.request_id] = _Flight(sreq=sreq,
                                                  pair=decision.pair,
-                                                 iters=iters)
+                                                 iters=iters,
+                                                 depart_tick=self.ticks)
         return decision
 
     # -- public ------------------------------------------------------------------
@@ -258,9 +277,13 @@ class ClusterServer:
                 decision = self.router.route(fl.sreq.req)
                 assert int(pair_node[decision.pair]) != node
                 self._dispatch(fl.sreq, decision.pair)
+                # keep the original depart tick: the monitor's completion
+                # latency measures end-to-end ticks since first dispatch,
+                # matching how `iters` keeps aging across the re-route
                 self.inflight[rid] = _Flight(sreq=fl.sreq, pair=decision.pair,
                                              iters=fl.iters,
-                                             hedge_pair=fl.hedge_pair)
+                                             hedge_pair=fl.hedge_pair,
+                                             depart_tick=fl.depart_tick)
         # dead copies are cancelled above, so no slot still pins a block
         for pair, eng in self.engines.items():
             if int(pair_node[pair]) == node:
@@ -301,20 +324,52 @@ class ClusterServer:
             self.engines[tr.decode_pair].import_kv(
                 tr.tokens[:tr.n_cov], tr.payload)
             self._dispatch(tr.sreq, tr.decode_pair)
-            self.inflight[rid] = _Flight(sreq=tr.sreq, pair=tr.decode_pair)
+            self.inflight[rid] = _Flight(sreq=tr.sreq, pair=tr.decode_pair,
+                                         depart_tick=self.ticks)
+        healthy = self.monitor.healthy_mask()
+        # phase A — fleet data plane: one stacked decode dispatch per cohort.
+        # Members mid-admission (queued work at chunk > 1), empty, or on a
+        # crashed node are masked out and fall back to the per-engine path in
+        # phase B; everyone else advances device-side here, and the host
+        # bookkeeping for their chunks runs in phase B in global pair order,
+        # so monitor/hedge accounting is ordered exactly as per-engine mode.
+        chunk_work: Dict[int, object] = {}
+        for ci, cohort in enumerate(self._cohorts):
+            pairs = self._cohort_pairs[ci]
+            eligible = [m for m, p in enumerate(pairs)
+                        if healthy[int(pair_node[p])]]
+            if not eligible:
+                continue
+            res = cohort.dispatch(chunk, eligible)
+            if not res.work:
+                continue
+            # fleet counters straight off the stacked retirement mask
+            self.monitor.record_fleet(self._cohort_nodes[ci],
+                                      res.emitted, res.retired)
+            for m, w in res.work.items():
+                chunk_work[pairs[m]] = w
+        # phase B — host control plane, in pair order
         advanced: Dict[int, int] = {}
         for pair, eng in self.engines.items():
             node = int(pair_node[pair])
-            if not self.monitor.healthy_mask()[node]:
+            if not healthy[node]:
                 continue  # crashed node makes no progress
             steps_before = eng._steps
-            retired = eng.step_n(chunk) if chunk > 1 else eng.step()
+            if pair in chunk_work:
+                retired = eng._commit_chunk(chunk_work[pair])
+            else:
+                retired = eng.step_n(chunk) if chunk > 1 else eng.step()
             advanced[pair] = eng._steps - steps_before
             for rid in retired:
                 if rid in self.inflight:
                     fl = self.inflight.pop(rid)
                     self.done[rid] = eng.results[rid]
-                    self.monitor.on_complete(node, latency=fl.iters + 1.0)
+                    # completion latency in scheduler ticks — the same unit
+                    # KV-handoff deliveries record — not decode iterations,
+                    # which diverge by a factor of `chunk` when chunking
+                    self.monitor.on_complete(
+                        node,
+                        latency=float(max(self.ticks - fl.depart_tick, 1)))
                     if fl.hedge_pair is not None:
                         # first completion wins: cancel the losing copy and
                         # close its dispatch accounting, or `outstanding`
@@ -346,10 +401,50 @@ class ClusterServer:
                     f"requests stuck: {list(self.inflight)[:5]}")
         return self.done
 
+    # -- fleet-counter aggregation (no per-engine Python loop in fleet mode) --
+    @property
+    def _loose_engines(self) -> List[LLMEngine]:
+        """Engines outside every cohort (fleet off, or non-vectorizable)."""
+        return [e for p, e in self.engines.items()
+                if p not in self._pair_cohort]
+
+    @property
+    def active_count(self) -> int:
+        """Occupied decode slots across the cluster — one vectorized sum per
+        cohort (members sync their numpy counter slot on every slot/queue
+        mutation) plus the loose stragglers."""
+        n = sum(int(c.counters.active.sum()) for c in self._cohorts)
+        return n + sum(e.active_count for e in self._loose_engines)
+
+    @property
+    def queue_len(self) -> int:
+        """Active + queued requests across the cluster (engine semantics)."""
+        n = sum(int(c.counters.active.sum() + c.counters.queued.sum())
+                for c in self._cohorts)
+        return n + sum(e.queue_len for e in self._loose_engines)
+
+    @property
+    def decode_dispatches(self) -> int:
+        """Total jitted decode dispatches: one per cohort chunk plus one per
+        per-engine (fallback or loose) step — the benchmark's O(#cohorts)
+        vs O(#engines) evidence."""
+        return (sum(c.counters.dispatches for c in self._cohorts)
+                + sum(e.decode_dispatches for e in self.engines.values()))
+
     def stats(self) -> dict:
+        cohorts = [{"pairs": list(pairs), "size": len(pairs),
+                    "dispatches": c.counters.dispatches,
+                    "emitted": int(c.counters.emitted.sum()),
+                    "retired": int(c.counters.retired.sum())}
+                   for c, pairs in zip(self._cohorts, self._cohort_pairs)]
         return {"completed": len(self.done), "hedges": self._hedges,
                 "reroutes": self._reroutes, "handoffs": self._handoffs,
                 "transfers_inflight": len(self.transfers),
                 "cancelled": sum(s.total_cancelled
                                  for s in self.monitor.stats.values()),
-                "queue_lengths": self.monitor.queue_lengths()}
+                "queue_lengths": self.monitor.queue_lengths(),
+                "active": self.active_count,
+                "queued": self.queue_len,
+                "decode_dispatches": self.decode_dispatches,
+                "cohorts": cohorts,
+                "fleet": self.monitor.fleet_totals()}

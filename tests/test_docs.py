@@ -69,3 +69,23 @@ def test_architecture_doc_has_disagg_section():
 def test_benchmarks_readme_names_disagg():
     doc = (REPO / "benchmarks" / "README.md").read_text()
     assert "disagg.py" in doc and "split fraction" in doc
+
+
+def test_architecture_doc_has_fleet_section():
+    """The fleet-vectorized-serving section must exist and cover the cohort
+    grouping rules, the host/device split, and the fallback conditions."""
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "Fleet-vectorized serving" in doc
+    for needle in ("Cohort grouping rules", "build_cohorts", "fleet_ok",
+                   "FleetState", "FleetMemberStore", "Fallback conditions",
+                   "O(#cohorts)", "fleet=False", "fleet_testbed",
+                   "record_fleet", "byte-identical"):
+        assert needle in doc, f"fleet docs miss: {needle}"
+
+
+def test_readme_and_bench_readme_name_fleet():
+    readme = (REPO / "README.md").read_text()
+    assert "serving/fleet.py" in readme and "cohort" in readme
+    bench = (REPO / "benchmarks" / "README.md").read_text()
+    assert "fleet_scale.py" in bench and "fleet_testbed" in bench
+    assert "dispatches per saturated tick" in bench

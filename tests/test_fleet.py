@@ -1,0 +1,281 @@
+"""Fleet-vectorized serving: cohort stepping must be byte-identical to the
+per-engine loop across every runtime routing policy, disaggregated KV
+handoffs and mid-run node failures — plus the satellite regressions
+(tick-unit completion latencies under chunking, O(#cohorts) dispatch counts,
+vectorized fleet counters, and jit-cache reuse across equal cohorts).
+
+Hedging is disabled in the identity suite (``hedge_after=10**9``): a hedged
+loser's cancel lands between cohort dispatch and host commit, one iteration
+later than the per-engine interleaving — a documented fleet-mode caveat that
+only ever touches the *discarded* copy (see docs/architecture.md).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.spec import disagg_testbed, fleet_testbed, paper_testbed
+from repro.configs import get
+from repro.core.policy import PAPER_DEFAULTS
+from repro.core.policies import runtime_policies
+from repro.models import lm
+from repro.serving import ClusterServer, EngineConfig, LLMEngine, ServeRequest
+from repro.serving import fleet as fleet_mod
+from repro.workload.trace import build_trace
+
+NO_HEDGE = 10**9
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get("stablelm-3b").smoke()
+    return cfg, lm.init(jax.random.key(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def builders(tiny_model):
+    """Two real tiny models standing in for the testbed's 4 names: the
+    three edge names share ONE (cfg, params) pair, so all edge engines
+    collapse into a single cohort."""
+    big, pb = tiny_model
+    small = get("qwen3-1.7b").smoke()
+    ps = lm.init(jax.random.key(1), small)
+    return {"gemma3:27b": (big, pb),
+            "qwen2.5:1.5b-instruct": (small, ps),
+            "qwen2.5-coder:1.5b-instruct": (small, ps),
+            "qwen2.5-math:1.5b-instruct": (small, ps)}
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return build_trace(24, seed=5)
+
+
+def _server(cluster, builders, fleet, policy="threshold", ecfg=None, **kw):
+    return ClusterServer(cluster, builders, PAPER_DEFAULTS,
+                         ecfg or EngineConfig(max_slots=2, max_seq=48,
+                                              max_new_tokens=4),
+                         hedge_after=NO_HEDGE, fleet=fleet,
+                         router_kwargs={"mode": policy}, **kw)
+
+
+def _drive(srv, reqs, chunk, max_new=4, mid=None):
+    """Submit ``reqs``, optionally run ``mid(srv)`` after two ticks, drain."""
+    for i, r in enumerate(reqs):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=max_new))
+    if mid is not None:
+        srv.step(chunk=chunk)
+        srv.step(chunk=chunk)
+        mid(srv)
+    return srv.run(chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: fleet cohorts vs the per-engine loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", runtime_policies())
+def test_fleet_identity_across_policies(builders, trace, policy):
+    """Same cluster, same requests, same policy: fleet=True must reproduce
+    fleet=False bit-for-bit — tokens AND the full QoE accounting (ttft/tpot
+    step timestamps ride in each result dict)."""
+    reqs = trace.requests[:10]
+    done = {}
+    for fleet in (False, True):
+        srv = _server(paper_testbed(), builders, fleet, policy=policy)
+        done[fleet] = _drive(srv, reqs, chunk=1)
+    assert done[True] == done[False]
+
+
+@pytest.mark.parametrize("chunk", [2, 4])
+def test_fleet_identity_chunked(builders, trace, chunk):
+    """Chunked cohort dispatch (one jit call for n iterations x M members)
+    must equal per-engine ``step_n`` — including its fall-back-to-one-step
+    behavior while admissions are queued."""
+    reqs = trace.requests[:12]
+    done = {}
+    for fleet in (False, True):
+        srv = _server(paper_testbed(), builders, fleet)
+        done[fleet] = _drive(srv, reqs, chunk=chunk, max_new=6)
+    assert done[True] == done[False]
+
+
+def test_fleet_identity_disagg_handoffs_mid_chunk(tiny_model):
+    """Disaggregated routes: prefilled KV rides the transfer queue and lands
+    between cohort chunks; the import + admission must leave fleet results
+    identical to the per-engine path, with no leaked blocks."""
+    cfg, params = tiny_model
+    cluster = disagg_testbed()
+    bld = {"gemma3:27b": (cfg, params)}
+    reqs = [dataclasses.replace(r, text=" ".join(f"w{i}_{j}"
+                                                 for j in range(20)),
+                                prompt_tokens=20)
+            for i, r in enumerate(build_trace(24, seed=5).requests[:8])]
+    ecfg = EngineConfig(max_slots=2, max_seq=48, max_new_tokens=3,
+                        prefix_cache=True, block_size=8, cache_blocks=32)
+    done, srvs = {}, {}
+    for fleet in (False, True):
+        srv = _server(cluster, bld, fleet, policy="disagg", ecfg=ecfg)
+        done[fleet] = _drive(srv, reqs, chunk=2, max_new=3)
+        srvs[fleet] = srv
+    assert done[True] == done[False]
+    assert srvs[True].stats()["handoffs"] >= 1      # splits actually taken
+    for eng in srvs[True].engines.values():
+        eng.kv.cache.check_invariants()
+        assert int(np.sum(eng.kv.cache.pool.ref > 0)) == 0
+
+
+def test_fleet_identity_node_failure_mid_chunk(builders, trace):
+    """``fail_node`` kills a cohort member two ticks in: survivors must be
+    byte-identical to the per-engine path and the dead member's paged pool
+    must restart empty (no leaked blocks)."""
+    reqs = trace.requests[:10]
+    ecfg = EngineConfig(max_slots=2, max_seq=48, max_new_tokens=4,
+                        prefix_cache=True, block_size=8, cache_blocks=32)
+    done, srvs = {}, {}
+    for fleet in (False, True):
+        srv = _server(paper_testbed(), builders, fleet, ecfg=ecfg)
+        done[fleet] = _drive(srv, reqs, chunk=2,
+                             mid=lambda s: s.fail_node(1))
+        srvs[fleet] = srv
+    assert done[True] == done[False]
+    assert srvs[True].stats()["reroutes"] == srvs[False].stats()["reroutes"]
+    pair_node = np.asarray(srvs[True].router.arrays.pair_node)
+    for p, eng in srvs[True].engines.items():
+        eng.kv.cache.check_invariants()
+        if int(pair_node[p]) == 1:   # restarted empty
+            assert eng.kv.cache.pool.n_free == eng.ecfg.cache_blocks
+
+
+def test_fleet_identity_mixed_workload(tiny_model):
+    """The acceptance-criteria workload in one run: multi-turn session
+    traffic with prefix reuse + disaggregated KV handoffs + a node failure
+    mid-run, chunked — fleet must reproduce the per-engine loop exactly."""
+    from repro.workload.sessions import SessionConfig, build_session_trace
+    cfg, params = tiny_model
+    cluster = disagg_testbed()
+    bld = {"gemma3:27b": (cfg, params)}
+    tr = build_session_trace(SessionConfig(n_sessions=4, mean_turns=3.0),
+                             seed=3, n_requests=10)
+    reqs = [dataclasses.replace(r, text=r.text + " " + " ".join(
+                f"pad{i}_{j}" for j in range(12)),
+                                prompt_tokens=r.prompt_tokens + 12)
+            for i, r in enumerate(tr.requests)]
+    ecfg = EngineConfig(max_slots=2, max_seq=48, max_new_tokens=3,
+                        prefix_cache=True, block_size=8, cache_blocks=32)
+    done, srvs = {}, {}
+    for fleet in (False, True):
+        srv = _server(cluster, bld, fleet, policy="disagg", ecfg=ecfg)
+        done[fleet] = _drive(srv, reqs, chunk=2, max_new=3,
+                             mid=lambda s: s.fail_node(1))
+        srvs[fleet] = srv
+    assert done[True] == done[False]
+    assert len(done[True]) == len(reqs)
+    assert srvs[True].stats()["handoffs"] >= 1
+    for eng in srvs[True].engines.values():
+        eng.kv.cache.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# satellite: completion latency unit (ticks, not decode iterations)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fleet", [False, True])
+def test_completion_latency_in_ticks_under_chunking(builders, trace, fleet):
+    """Regression: engine completions used to record ``iters + 1`` decode
+    iterations while KV-handoff deliveries recorded scheduler ticks — under
+    ``chunk=4`` the same wait produced a 4x larger 'latency' depending on
+    which path closed it. Both paths now record ticks."""
+    srv = _server(paper_testbed(), builders, fleet,
+                  ecfg=EngineConfig(max_slots=2, max_seq=48,
+                                    max_new_tokens=8))
+    seen = []
+    orig = srv.monitor.on_complete
+    srv.monitor.on_complete = (
+        lambda node, latency: (seen.append(latency), orig(node, latency))[1])
+    _drive(srv, trace.requests[:6], chunk=4, max_new=8)
+    assert seen
+    # tick-unit latencies can never exceed the scheduler clock, and the
+    # fastest completion (8 decode iterations = 2 chunks, no queueing) takes
+    # 2 ticks — the old iteration unit would have recorded >= 8 for it
+    assert all(1 <= lat <= srv.ticks for lat in seen), (seen, srv.ticks)
+    assert min(seen) < 8
+
+
+# ---------------------------------------------------------------------------
+# satellite: O(#cohorts) dispatches + vectorized fleet counters
+# ---------------------------------------------------------------------------
+def test_saturated_tick_is_one_dispatch_per_cohort(builders, trace):
+    """With every engine busy, one tick costs exactly ``len(cohorts)``
+    jitted decode dispatches — not one per engine."""
+    srv = _server(paper_testbed(), builders, True)
+    assert len(srv._cohorts) == 2          # {big} + {small x 9 edge pairs}
+    assert sum(len(c) for c in srv._cohorts) == len(srv.engines)
+    for i, pair in enumerate(srv.engines):  # saturate every engine directly
+        srv._dispatch(ServeRequest(request_id=100 + i,
+                                   req=trace.requests[i % 12],
+                                   max_new_tokens=4), pair)
+    assert all(e.active_count > 0 for e in srv.engines.values())
+    before = srv.decode_dispatches
+    srv.step()
+    assert srv.decode_dispatches - before == len(srv._cohorts)
+    assert all(e._steps == 1 for e in srv.engines.values())
+
+
+def test_fleet_counters_match_engine_ground_truth(builders, trace):
+    """`active_count`/`queue_len`/`stats()` aggregate numpy cohort counters;
+    they must track the per-engine Python-loop truth at every tick."""
+    srv = _server(paper_testbed(), builders, True)
+    for i, r in enumerate(trace.requests[:12]):
+        srv.submit(ServeRequest(request_id=i, req=r, max_new_tokens=4))
+    while srv.inflight:
+        assert srv.active_count == sum(e.active_count
+                                       for e in srv.engines.values())
+        assert srv.queue_len == sum(e.queue_len
+                                    for e in srv.engines.values())
+        srv.step()
+    st = srv.stats()
+    assert st["active"] == 0 and st["queued"] == 0
+    assert st["fleet"]["emitted"] == sum(c["emitted"] for c in st["cohorts"])
+    assert st["fleet"]["retired"] == len(srv.done)
+    assert sum(c["dispatches"] for c in st["cohorts"]) >= 1
+    assert st["decode_dispatches"] >= sum(c["dispatches"]
+                                          for c in st["cohorts"])
+
+
+def test_fleet_testbed_collapses_to_two_cohorts(builders):
+    """64 nodes -> 176 (node, model) pairs -> exactly 2 cohorts when the
+    edge names share one (cfg, params) identity (the benchmark's setup)."""
+    cluster = fleet_testbed(n_edge=56, n_cloud=8)
+    assert len(cluster.nodes) == 64
+    srv = _server(cluster, builders, True)
+    assert len(srv.engines) == 8 + 56 * 3
+    assert len(srv._cohorts) == 2
+    assert sorted(len(c) for c in srv._cohorts) == [8, 168]
+
+
+# ---------------------------------------------------------------------------
+# satellite: jit-cache reuse across cohorts with equal statics
+# ---------------------------------------------------------------------------
+def test_equal_cohorts_share_one_trace(tiny_model):
+    """Two cohorts with identical (ModelConfig, member count, chunk, eos)
+    must share ONE compiled executable: the second cohort's dispatches add
+    zero new traces to the module-level jit cache."""
+    cfg, params = tiny_model
+    ecfg = EngineConfig(max_slots=2, max_seq=48, max_new_tokens=4)
+    rng = np.random.default_rng(0)
+
+    def make_cohort():
+        engines = [LLMEngine(cfg, params, ecfg) for _ in range(2)]
+        for e in engines:
+            e.submit(0, rng.integers(0, cfg.vocab, size=6), max_new_tokens=4)
+        return fleet_mod.Cohort(engines)
+
+    c1, c2 = make_cohort(), make_cohort()
+    before = fleet_mod._cohort_decode_chunk._cache_size()
+    c1.dispatch(2, [0, 1])
+    after_first = fleet_mod._cohort_decode_chunk._cache_size()
+    assert after_first == before + 1       # one trace for this identity
+    c2.dispatch(2, [0, 1])
+    c1.dispatch(2, [0, 1])
+    assert fleet_mod._cohort_decode_chunk._cache_size() == after_first, \
+        "equal-static cohorts must reuse one executable"
