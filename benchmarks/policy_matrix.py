@@ -27,6 +27,7 @@ from repro.cluster.spec import paper_testbed
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config
 from repro.core.policies import get_policy, list_policies
+from repro.obs.metrics import Histogram
 from repro.workload.sessions import SessionConfig, build_session_trace
 from repro.workload.slo import attach_slos
 
@@ -53,9 +54,18 @@ def _workload(seed: int):
 def run(seed: int = 0):
     cluster = paper_testbed()
     tr = _workload(seed)
-    ev = TraceEvaluator(tr, cluster,
-                        EvalConfig(mode="open", prefix_cache=True),
-                        bucket="pow2")
+    ev_pair = TraceEvaluator(tr, cluster,
+                             EvalConfig(mode="open", prefix_cache=True),
+                             bucket="pow2")
+    # route-valued policies (decides == "route", e.g. disagg) index the
+    # cluster's (prefill, decode) route table, so they need the
+    # disaggregated environment model; every paper_testbed node is
+    # unified-role, so colocated routes exist and the comparison stays on
+    # the same hardware
+    ev_route = TraceEvaluator(tr, cluster,
+                              EvalConfig(mode="open", prefix_cache=True,
+                                         disaggregated=True),
+                              bucket="pow2")
     pop = 8 if SMOKE else POP
     gens = 4 if SMOKE else GENS
 
@@ -63,6 +73,7 @@ def run(seed: int = 0):
     for name in list_policies():
         pol = get_policy(name)
         spec = pol.genome_spec
+        ev = ev_route if pol.decides == "route" else ev_pair
         if spec.per_request:
             cfg = NSGA2Config.from_policy(pol, pop_size=pop,
                                           n_generations=gens,
@@ -81,17 +92,31 @@ def run(seed: int = 0):
         if spec.defaults is not None:
             variants["default"] = np.asarray(spec.defaults)
         for variant, g in variants.items():
-            s = ev.summarize(ev.run_policy(name, g))
+            res = ev.run_policy(name, g)
+            s = ev.summarize(res)
+            # tail latency off the shared log-bucket histogram (repro.obs):
+            # means hide exactly the p95/p99 regressions routing policies
+            # trade against, so the matrix reports both
+            h_rt, h_tt = Histogram(), Histogram()
+            h_rt.observe(np.asarray(res.rt, np.float64))
+            h_tt.observe(np.asarray(res.ttft, np.float64))
+            rt_p, tt_p = h_rt.percentiles(), h_tt.percentiles()
             rows.append([name, variant, f"{s['avg_quality']:.4f}",
                          f"{s['avg_cost']:.4e}",
                          f"{s['avg_response_time']:.4f}",
-                         f"{s['avg_ttft']:.4f}",
+                         f"{rt_p['p50']:.4f}", f"{rt_p['p95']:.4f}",
+                         f"{rt_p['p99']:.4f}",
+                         f"{s['avg_ttft']:.4f}", f"{tt_p['p99']:.4f}",
                          f"{s['slo_attainment']:.4f}",
                          f"{s['cache_hit_frac']:.4f}", f"{fit_s:.3f}"])
             bench[f"{name}.{variant}"] = {
                 "policy": name, "variant": variant,
                 "avg_quality": s["avg_quality"], "avg_cost": s["avg_cost"],
                 "avg_rt_s": s["avg_response_time"],
+                "rt_p50_s": float(rt_p["p50"]),
+                "rt_p95_s": float(rt_p["p95"]),
+                "rt_p99_s": float(rt_p["p99"]),
+                "ttft_p99_s": float(tt_p["p99"]),
                 "slo_attainment": s["slo_attainment"],
                 "cache_hit_frac": s["cache_hit_frac"],
                 "nsga2_fit_s": fit_s,
@@ -100,7 +125,8 @@ def run(seed: int = 0):
     suffix = "_smoke" if SMOKE else ""
     write_csv(f"policy_matrix{suffix}.csv",
               ["policy", "variant", "avg_quality", "avg_cost", "avg_rt_s",
-               "avg_ttft_s", "slo_attainment", "cache_hit_frac",
+               "rt_p50_s", "rt_p95_s", "rt_p99_s", "avg_ttft_s",
+               "ttft_p99_s", "slo_attainment", "cache_hit_frac",
                "nsga2_fit_s"], rows)
     write_bench_json(f"policy_matrix{suffix}", {
         "n_requests": tr.n_requests, "pop_size": pop, "generations": gens,
@@ -114,7 +140,8 @@ def main():
     for key, r in bench.items():
         print(f"policy_matrix.{key},{r['nsga2_fit_s'] * 1e6:.0f},"
               f"quality={r['avg_quality']:.4f} cost={r['avg_cost']:.4e} "
-              f"rt={r['avg_rt_s']:.4f} attain={r['slo_attainment']:.4f} "
+              f"rt={r['avg_rt_s']:.4f} rt_p99={r['rt_p99_s']:.4f} "
+              f"attain={r['slo_attainment']:.4f} "
               f"hit={r['cache_hit_frac']:.4f}")
     # the registry contract: every registered policy produced a tuned row
     missing = [p for p in list_policies()

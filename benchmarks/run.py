@@ -11,9 +11,9 @@ import traceback
 
 def main() -> None:
     from . import (disagg, fig2_quality, fig3_tradeoff, fig4_concurrency,
-                   fleet_scale, hotpath, nsga2_perf, online_drift,
-                   policy_matrix, prefix_reuse, roofline, slo_attainment,
-                   table2_routing)
+                   fleet_scale, hotpath, nsga2_perf, obs_overhead,
+                   online_drift, policy_matrix, prefix_reuse, roofline,
+                   slo_attainment, table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
@@ -25,6 +25,7 @@ def main() -> None:
                ("disagg", disagg),
                ("nsga2_perf", nsga2_perf),
                ("fleet_scale", fleet_scale),
+               ("obs_overhead", obs_overhead),
                ("hotpath", hotpath),
                ("roofline", roofline)]
     failures = 0

@@ -23,9 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -39,6 +42,10 @@ class NodeStats:
     last_heartbeat: float = 0.0
     ewma_latency: float = 0.0
     ewma_alpha: float = 0.2
+    # seeded on the FIRST completion (whatever its latency, zero included);
+    # the old ``ewma or latency`` idiom re-seeded whenever the EWMA happened
+    # to be exactly 0.0
+    ewma_initialized: bool = False
     # drift sensing: fast tracker vs slow baseline of the same signal
     ewma_fast: float = 0.0
     ewma_slow: float = 0.0
@@ -57,15 +64,23 @@ class ClusterMonitor:
     code runs under the discrete-event simulator and in wall-clock serving."""
 
     def __init__(self, n_nodes: int, heartbeat_timeout: float = 10.0,
-                 now: float = 0.0):
+                 now: float = 0.0,
+                 metrics: Optional[MetricsRegistry] = None):
         self.stats: Dict[int, NodeStats] = {
             j: NodeStats(last_heartbeat=now) for j in range(n_nodes)}
         self.heartbeat_timeout = heartbeat_timeout
+        # all monitor series live in one queryable MetricsRegistry (shared
+        # with the scheduler's when serving; private otherwise)
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         # fleet counters: per-node emitted-token / retired-slot totals fed in
         # one vectorized update per cohort dispatch from the stacked
-        # (member, n, 3, B) chunk output — no per-engine host pulls
-        self.fleet_emitted = np.zeros(n_nodes, np.int64)
-        self.fleet_retired = np.zeros(n_nodes, np.int64)
+        # (member, n, 3, B) chunk output — no per-engine host pulls. Backed
+        # by registry CounterVecs so fleet_totals() and metrics_flat() read
+        # the same storage.
+        self.fleet_emitted = self.metrics.counter(
+            "fleet_tokens_emitted", n_nodes).values
+        self.fleet_retired = self.metrics.counter(
+            "fleet_slots_retired", n_nodes).values
 
     # -- data plane callbacks -------------------------------------------------
     def on_dispatch(self, node: int) -> None:
@@ -77,12 +92,19 @@ class ClusterMonitor:
         s = self.stats[node]
         s.outstanding = max(0, s.outstanding - 1)
         s.total_completed += 1
-        s.ewma_latency = (s.ewma_alpha * latency
-                          + (1 - s.ewma_alpha) * (s.ewma_latency or latency))
-        s.ewma_fast = (s.alpha_fast * latency
-                       + (1 - s.alpha_fast) * (s.ewma_fast or latency))
-        s.ewma_slow = (s.alpha_slow * latency
-                       + (1 - s.alpha_slow) * (s.ewma_slow or latency))
+        if not s.ewma_initialized:
+            # seed all trackers on the first observation — 0.0 is a
+            # legitimate first latency and must not leave them unseeded
+            s.ewma_latency = s.ewma_fast = s.ewma_slow = latency
+            s.ewma_initialized = True
+        else:
+            s.ewma_latency = (s.ewma_alpha * latency
+                              + (1 - s.ewma_alpha) * s.ewma_latency)
+            s.ewma_fast = (s.alpha_fast * latency
+                           + (1 - s.alpha_fast) * s.ewma_fast)
+            s.ewma_slow = (s.alpha_slow * latency
+                           + (1 - s.alpha_slow) * s.ewma_slow)
+        self.metrics.observe("latency", latency, node=node)
 
     def on_failure(self, node: int) -> None:
         s = self.stats[node]
@@ -113,8 +135,21 @@ class ClusterMonitor:
                 "retired": int(self.fleet_retired.sum())}
 
     def heartbeat(self, node: int, now: Optional[float] = None) -> None:
+        """Mark ``node`` alive at ``now`` (the caller's clock).
+
+        ``now`` is required: the old silent ``time.monotonic()`` fallback
+        mixed wall clock into simulated-tick runs, poisoning ``sweep``
+        expiry. The fallback survives as a deprecation shim only.
+        """
+        if now is None:
+            warnings.warn(
+                "ClusterMonitor.heartbeat() without now= is deprecated; "
+                "pass the caller's clock explicitly (wall-clock callers: "
+                "heartbeat(node, now=time.monotonic()))",
+                DeprecationWarning, stacklevel=2)
+            now = time.monotonic()
         s = self.stats[node]
-        s.last_heartbeat = time.monotonic() if now is None else now
+        s.last_heartbeat = now
         s.healthy = True
 
     def mark_down(self, node: int) -> None:

@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.policies import PolicyInputs, get_policy
+from ..obs.trace import NOOP_TRACER
 from ..workload.trace import Trace
 from .spec import ClusterSpec
 
@@ -228,8 +229,78 @@ class ClusterSimulator:
             hit_frac=hit, queue_len=np.asarray(busy, np.int64),
             kv_bytes=kv_bytes)
 
+    # -- observability emission (shared by both oracles, so the span and
+    # audit streams are identical by construction) ----------------------------
+    def _trace_issue(self, tracer, audit, i: int, now: float, pol, g, inp,
+                     raw: int, decided: int,
+                     failover: Optional[str] = None) -> None:
+        """Open request i's span and log its routing decision. ``decided``
+        is a pair index (colocated mode) or a route index (disaggregated);
+        ``raw`` is the policy output before any down-node failover."""
+        if tracer.enabled:
+            tracer.begin(i, now,
+                         category=int(self.trace.pred_category[i]))
+            tracer.event(i, "route-decision", now, decision=int(decided),
+                         raw=int(raw), failover=failover)
+        if audit is not None and pol is not None:
+            if self.disaggregated:
+                a = self.np_arrays
+                pair = int(a.route_decode[decided])
+                prefill_pair = int(a.route_prefill[decided])
+            else:
+                pair = int(decided)
+                prefill_pair = None
+            audit.record(
+                i, now, pol.name, pol.decides, g, raw, pair,
+                int(self.pair_node[pair]), prefill_pair=prefill_pair,
+                failover=failover, queue=inp.queue_len,
+                category=int(inp.pred_category), up=inp.up,
+                prefill=inp.prefill, tpot=inp.tpot, cost=inp.cost,
+                hit=inp.hit_frac, est_cost=float(inp.cost[pair]))
+
+    def _trace_colo(self, tracer, i: int, arrival: float, pair: int,
+                    node: int, wait_i: float, prefill_i: float,
+                    decode_i: float, completion: float) -> None:
+        """Phase timeline of a colocated execution; the five phase
+        durations sum to ``completion - arrival`` (span conservation)."""
+        if not tracer.enabled:
+            return
+        up_i = float(self.up[i, pair])
+        down_i = float(self.down[i, pair])
+        ready = arrival + up_i
+        start = ready + wait_i
+        tracer.event(i, "dispatch", arrival, node=node, pair=int(pair))
+        tracer.phase(i, "upload", arrival, up_i, node)
+        tracer.phase(i, "queue-wait", ready, wait_i, node)
+        tracer.phase(i, "prefill", start, prefill_i, node)
+        tracer.phase(i, "decode", start + prefill_i, decode_i, node)
+        tracer.phase(i, "download", start + prefill_i + decode_i, down_i,
+                     node)
+        tracer.event(i, "complete", completion, node=node)
+        tracer.end(i, completion, "completed")
+
+    def _record_metrics(self, metrics, res: "SimResult") -> None:
+        """Vectorized post-run ingest of a SimResult into the registry
+        (per-(node, category) labels from the realized assignment)."""
+        if metrics is None:
+            return
+        if self.disaggregated:
+            nodes = self.pair_node[
+                np.asarray(self.np_arrays.route_decode)[res.assign]]
+        else:
+            nodes = self.pair_node[res.assign]
+        cats = np.asarray(self.trace.pred_category)
+        metrics.observe_by("ttft", res.ttft, nodes, cats)
+        metrics.observe_by("tpot", res.tpot, nodes, cats)
+        metrics.observe_by("queue_wait", res.wait, nodes, cats)
+        metrics.observe_by("transfer", res.transfer, nodes, cats)
+        metrics.observe_by("cache_hit_frac", res.hit, nodes, cats)
+        metrics.observe_by("spend", res.cost, nodes, cats)
+        metrics.observe_by("latency", res.rt, nodes, cats)
+
     # -- disaggregated execution (shared by both oracles) --------------------
-    def _disagg_exec(self, cache, i: int, route: int, slots, arrival: float):
+    def _disagg_exec(self, cache, i: int, route: int, slots, arrival: float,
+                     tracer=NOOP_TRACER):
         """Greedy-at-issue execution of one request over route ``route``:
         prefill leg, KV transfer (0 on colocated routes), decode leg.
         Mirrors the JAX scan's disaggregated arithmetic op-for-op; mutates
@@ -277,6 +348,25 @@ class ClusterSimulator:
         completion = finish_d + self.down[i, qd]
         self._cache_admit(cache, i, node_p)
         self._cache_admit(cache, i, node_q)
+        if tracer.enabled:
+            # phase durations sum to completion - arrival exactly: upload,
+            # prefill queue-wait, prefill, (transfer, decode queue-wait),
+            # decode, download (span conservation, tests/test_obs.py)
+            tracer.event(i, "dispatch", arrival, node=node_p, pair=p)
+            tracer.phase(i, "upload", arrival, float(self.up[i, p]), node_p)
+            tracer.phase(i, "queue-wait", ready, wait_p, node_p)
+            tracer.phase(i, "prefill", start_p, prefill_eff, node_p)
+            if not colo:
+                tracer.event(i, "handoff-start", finish_p, node=node_p,
+                             decode_node=node_q)
+                tracer.phase(i, "kv-transfer", finish_p, tt, node_q)
+                tracer.phase(i, "queue-wait-decode", finish_p + tt, wait_d,
+                             node_q)
+            tracer.phase(i, "decode", finish_d - decode_t, decode_t, node_q)
+            tracer.phase(i, "download", finish_d, float(self.down[i, qd]),
+                         node_q)
+            tracer.event(i, "complete", completion, node=node_q)
+            tracer.end(i, completion, "completed")
         return {"pair": qd, "hf": hf, "cost": cost_i,
                 "wait": wait_p + wait_d,
                 "ttft": (start_p + prefill_eff) - arrival,
@@ -289,7 +379,8 @@ class ClusterSimulator:
             down_nodes: Optional[Dict[int, Tuple[float, float]]] = None,
             on_failure: Optional[Callable[[int, int], int]] = None,
             arrivals: Optional[Sequence[float]] = None,
-            policy: Optional[str] = None, genome=None) -> SimResult:
+            policy: Optional[str] = None, genome=None,
+            tracer=None, audit=None, metrics=None) -> SimResult:
         """Execute the trace under assignment ``assign``, or — with
         ``policy=``/``genome=`` — decide each request in-loop through the
         RoutingPolicy registry (the DES twin of the JAX scan's in-scan
@@ -304,11 +395,17 @@ class ClusterSimulator:
         request i enters the system at ``arrivals[i]`` regardless of earlier
         completions (``concurrency`` is ignored; node capacity still queues).
         Defaults to the trace's own ``arrival_time`` when it carries one.
+
+        tracer/audit/metrics: optional ``repro.obs`` sinks — per-request
+        lifecycle spans (simulated-seconds clock), per-decision audit
+        records, and a vectorized post-run metrics ingest. All default to
+        zero-overhead no-ops.
         """
         I = self.trace.n_requests
         G = concurrency
         n_nodes = len(self.cluster.nodes)
         down_nodes = down_nodes or {}
+        tracer = NOOP_TRACER if tracer is None else tracer
         pol, g, pstate = self._resolve_policy(policy, genome, assign)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
@@ -346,12 +443,15 @@ class ClusterSimulator:
                 inp = self._policy_inputs(i, busy_slots, cache, arrival)
                 pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
             else:
+                inp = None
                 pair = int(assign[i])
+            raw = pair
 
             if self.disaggregated:
                 # ``pair`` is a route index here; crash windows on either
                 # endpoint fall back to a colocated route
                 route = pair
+                failover = None
                 a_ = self.np_arrays
                 ends = {int(self.pair_node[a_.route_prefill[route]]),
                         int(self.pair_node[a_.route_decode[route]])}
@@ -363,8 +463,12 @@ class ClusterSimulator:
                                   if on_failure is not None
                                   else int(self.arrays.cloud_fallback_pair))
                             route = self._colo_route.get(int(fb), route)
+                            failover = "route-endpoint-down"
                             break
-                row = self._disagg_exec(cache, i, route, slots, arrival)
+                self._trace_issue(tracer, audit, i, arrival, pol, g, inp,
+                                  raw, route, failover)
+                row = self._disagg_exec(cache, i, route, slots, arrival,
+                                        tracer=tracer)
                 client_ready[c] = row["completion"]
                 if pol is not None:
                     pstate = pol.update_py(g, pstate, inp, row["pair"],
@@ -380,12 +484,16 @@ class ClusterSimulator:
                 continue
             node = int(self.pair_node[pair])
 
+            failover = None
             if node in down_nodes:
                 t_down, t_up = down_nodes[node]
                 if t_down <= arrival < t_up:
                     pair = (on_failure(i, node) if on_failure is not None
                             else int(self.arrays.cloud_fallback_pair))
                     node = int(self.pair_node[pair])
+                    failover = "node-down"
+            self._trace_issue(tracer, audit, i, arrival, pol, g, inp, raw,
+                              pair, failover)
 
             hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
                                                                 pair)
@@ -410,16 +518,21 @@ class ClusterSimulator:
             hit[i] = hf
             out_assign[i] = pair
             busy[node] += service_i
+            self._trace_colo(tracer, i, arrival, pair, node, wait[i],
+                             prefill_i, service_i - prefill_i, completion)
 
-        return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
-                         transfer=transfer)
+        res = SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
+                        node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
+                        transfer=transfer)
+        self._record_metrics(metrics, res)
+        return res
 
     # -- event-heap variant -------------------------------------------------
     def run_event_heap(self, assign: Optional[Sequence[int]] = None,
                        concurrency: int = 1,
                        arrivals: Optional[Sequence[float]] = None,
-                       policy: Optional[str] = None, genome=None
+                       policy: Optional[str] = None, genome=None,
+                       tracer=None, audit=None, metrics=None
                        ) -> SimResult:
         """Same semantics via an explicit event heap (belt-and-braces oracle:
         two independent queueing implementations must agree). With
@@ -430,6 +543,7 @@ class ClusterSimulator:
         I = self.trace.n_requests
         G = concurrency
         n_nodes = len(self.cluster.nodes)
+        tracer = NOOP_TRACER if tracer is None else tracer
         pol, g, pstate = self._resolve_policy(policy, genome, assign)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
@@ -470,9 +584,13 @@ class ClusterSimulator:
                     inp = self._policy_inputs(i, busy_slots, cache, t)
                     pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
                 else:
+                    inp = None
                     pair = int(assign[i])
+                self._trace_issue(tracer, audit, i, t, pol, g, inp, pair,
+                                  pair)
                 if self.disaggregated:
-                    row = self._disagg_exec(cache, i, pair, node_free, t)
+                    row = self._disagg_exec(cache, i, pair, node_free, t,
+                                            tracer=tracer)
                     if pol is not None:
                         pstate = pol.update_py(g, pstate, inp, row["pair"],
                                                row["cost"])
@@ -504,6 +622,9 @@ class ClusterSimulator:
                 ttft[i] = (start + prefill_i) - t
                 tpot[i] = self.tpot_pair[pair]; hit[i] = hf
                 out_assign[i] = pair; busy[node] += service_i
+                self._trace_colo(tracer, i, t, pair, node, wait[i],
+                                 prefill_i, service_i - prefill_i,
+                                 completion)
                 heapq.heappush(heap, (completion, seq, "done", (i, c))); seq += 1
             else:  # done -> closed-loop client issues its next request
                 _, c = payload
@@ -511,6 +632,8 @@ class ClusterSimulator:
                     heapq.heappush(heap, (t, seq, "issue", (issued, c)))
                     seq += 1; issued += 1
 
-        return SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
-                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
-                         transfer=transfer)
+        res = SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
+                        node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
+                        transfer=transfer)
+        self._record_metrics(metrics, res)
+        return res

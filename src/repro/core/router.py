@@ -72,6 +72,9 @@ class RouteDecision:
     # None for ordinary pair decisions; equal to ``pair`` on colocated
     # routes. ``pair`` is always the decode (billing/retirement) pair.
     prefill_pair: Optional[int] = None
+    # modelled $ of the chosen pair (0.0 when the policy never requested
+    # estimate rows); the serving scheduler's "spend" metric observation
+    est_cost: float = 0.0
 
 
 @dataclasses.dataclass
@@ -97,7 +100,8 @@ class RequestRouter:
                  slo_table=DEFAULT_SLO_TABLE,
                  affinity_params: Optional[Sequence[float]] = None,
                  cache_block: int = 16,
-                 params: Optional[Sequence[float]] = None):
+                 params: Optional[Sequence[float]] = None,
+                 audit=None):
         self.policy = get_policy(mode)     # ValueError lists registry names
         if self.policy.genome_spec.per_request:
             raise ValueError(
@@ -125,6 +129,9 @@ class RequestRouter:
         self._slo_ttft, self._slo_tpot = slo_arrays(slo_table)
         self.monitor = monitor or ClusterMonitor(len(cluster.nodes))
         self.hedge_factor = hedge_factor
+        # optional repro.obs.AuditLog: every route() call logs its
+        # per-candidate decision breakdown (None = zero overhead)
+        self.audit = audit
         self._rng = np.random.default_rng(0)
         # numpy view of the pair table, converted once: the per-request hot
         # path must not pay device-to-host transfers on every decision
@@ -250,6 +257,8 @@ class RequestRouter:
             kv_bytes=kv_bytes)
         decision = int(pol.decide_py(self.params, inp, self._np_arrays,
                                      self._pstate))
+        raw_decision = decision
+        failover = None
 
         prefill_pair = None
         if pol.decides == "route":
@@ -275,6 +284,7 @@ class RequestRouter:
                                key=lambda r: queue[self._pair_node[rq[r]]])
                 prefill_pair, pair = int(rp[decision]), int(rq[decision])
                 node = int(self._pair_node[pair])
+                failover = "route-endpoint-down"
         else:
             pair = decision
             node = int(self._pair_node[pair])
@@ -291,6 +301,7 @@ class RequestRouter:
                 pair = (cloud_alive[0] if cloud_alive else
                         min(alive, key=lambda p: queue[self._pair_node[p]]))
                 node = int(self._pair_node[pair])
+                failover = "node-down"
 
         # policy state advances on the pair actually dispatched (post
         # failover) so e.g. the budget ledger bills real spend, and only for
@@ -303,12 +314,25 @@ class RequestRouter:
         backup = None
         if want_backup:
             backup = self.backup_pair(pair)
+        if self.audit is not None:
+            self.audit.record(
+                int(inp.index), float(inp.now), pol.name, pol.decides,
+                self.params, raw_decision, pair, node,
+                prefill_pair=prefill_pair, failover=failover,
+                healthy=np.asarray(healthy, np.float64), queue=masked_queue,
+                category=int(pred_cat),
+                up=up if "estimates" in pol.requires else None,
+                prefill=prefill if "estimates" in pol.requires else None,
+                tpot=tpot if "estimates" in pol.requires else None,
+                cost=cost if "estimates" in pol.requires else None,
+                hit=hit if "cache" in pol.requires else None,
+                est_cost=float(cost[pair]), backup_pair=backup)
         return RouteDecision(
             pair=int(pair), node=node,
             model=int(self._np_arrays.pair_model[pair]),
             go_edge=bool(self._pair_is_edge[pair]),
             features=(c_i, pred_cat, conf), backup_pair=backup,
-            prefill_pair=prefill_pair)
+            prefill_pair=prefill_pair, est_cost=float(cost[pair]))
 
     def backup_pair(self, primary: int) -> Optional[int]:
         """A healthy pair on a *different* node, for hedged duplicates."""

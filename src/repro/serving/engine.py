@@ -117,6 +117,8 @@ class _Slot:
     submit_step: int = 0       # engine step at submit()
     first_token_step: int = 0  # engine step when prefill emitted token 0
     block_ids: List[int] = dataclasses.field(default_factory=list)
+    prompt_tokens: int = 0     # prompt length at admission
+    cached_tokens: int = 0     # whole-block prefix reused from the paged pool
 
 
 class _LocalStore:
@@ -506,6 +508,13 @@ class LLMEngine:
             "ttft_steps": s.first_token_step - s.submit_step,
             "tpot_steps": ((finish_step - s.first_token_step) / n_decode
                            if n_decode else 0.0),
+            "decode_steps": finish_step - s.first_token_step,
+            # realized prefix-cache reuse of this request's admission (the
+            # per-request cache-hit observation the obs metrics ingest)
+            "prompt_tokens": s.prompt_tokens,
+            "cached_tokens": s.cached_tokens,
+            "cached_frac": (s.cached_tokens / s.prompt_tokens
+                            if s.prompt_tokens else 0.0),
         }
 
     def qoe_summary(self) -> dict:
@@ -631,6 +640,8 @@ class LLMEngine:
         s.submit_step = submit_step
         s.first_token_step = self._steps
         s.block_ids = block_ids
+        s.prompt_tokens = L
+        s.cached_tokens = prefix_len
         self._next_token = self._next_token.at[slot, 0].set(first)
         if s.budget <= 0:
             self.results[request_id] = self._result(s, self._steps)

@@ -217,6 +217,12 @@ class CohortDispatch(NamedTuple):
     emitted: np.ndarray          # (M,) tokens emitted this chunk, per member
     retired: np.ndarray          # (M,) slots retired this chunk, per member
 
+    @property
+    def participants(self) -> int:
+        """Members that rode this stacked dispatch (0 = no dispatch ran) —
+        telemetry reads it host-side, no extra device sync."""
+        return len(self.work)
+
 
 class Cohort:
     """A group of engines sharing one (ModelConfig, EngineConfig, params)

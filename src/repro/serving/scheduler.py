@@ -43,6 +43,7 @@ from ..cluster.monitor import ClusterMonitor
 from ..cluster.spec import ClusterSpec
 from ..core.router import RequestRouter
 from ..models import lm
+from ..obs import Obs
 from ..workload.datasets import Request
 from ..workload.tokenizer import count_tokens
 from .engine import EngineConfig, LLMEngine
@@ -63,6 +64,8 @@ class _Flight:
     iters: int = 0
     hedge_pair: Optional[int] = None
     depart_tick: int = 0   # scheduler tick of the (original) dispatch
+    category: int = -1     # classifier category at routing (metrics label)
+    est_cost: float = 0.0  # modelled $ of the routed pair (spend metric)
 
 
 @dataclasses.dataclass
@@ -83,6 +86,8 @@ class _Transfer:
     payload: object            # host K/V slabs (kvcache.export_blocks)
     depart_tick: int
     eta: int
+    category: int = -1         # classifier category (metrics label)
+    est_cost: float = 0.0      # modelled $ of the decode pair (spend metric)
 
 
 class ClusterServer:
@@ -90,18 +95,30 @@ class ClusterServer:
                  thresholds, engine_cfg: EngineConfig = EngineConfig(),
                  hedge_after: int = 64, vocab_cap: Optional[int] = None,
                  router_kwargs: Optional[dict] = None,
-                 tick_seconds: float = 0.05, fleet: bool = True):
+                 tick_seconds: float = 0.05, fleet: bool = True,
+                 obs: Optional[Obs] = None):
         """model_builders: model name -> (ModelConfig, params).
         router_kwargs: extra RequestRouter arguments (e.g.
         ``mode="affinity"`` for cache-affinity dispatch).
         fleet: stack engines sharing a (ModelConfig, EngineConfig, params)
         identity into cohorts (``serving.fleet``) so each cohort decodes in
         ONE jitted dispatch per tick; ``False`` keeps the per-engine Python
-        loop (byte-identical results, O(#engines) dispatches)."""
+        loop (byte-identical results, O(#engines) dispatches).
+        obs: optional ``repro.obs.Obs`` telemetry bundle — lifecycle spans
+        on the scheduler-tick clock, the shared metrics registry, and the
+        router decision audit. Defaults to ``Obs.noop()``: no span/audit
+        recording, but the metrics registry (always owned by the monitor)
+        still feeds ``stats()['percentiles']``."""
         self.cluster = cluster
-        self.monitor = ClusterMonitor(len(cluster.nodes))
+        self.obs = Obs.noop() if obs is None else obs
+        self.tracer = self.obs.tracer
+        self.monitor = ClusterMonitor(len(cluster.nodes),
+                                      metrics=self.obs.metrics)
+        self.metrics = self.monitor.metrics  # always a live registry
+        rkw = dict(router_kwargs or {})
+        rkw.setdefault("audit", self.obs.audit)
         self.router = RequestRouter(cluster, thresholds, monitor=self.monitor,
-                                    **(router_kwargs or {}))
+                                    **rkw)
         self.engines: Dict[int, LLMEngine] = {}
         self.pair_model_cfg: Dict[int, object] = {}
         for p, (j, k) in enumerate(cluster.pairs()):
@@ -121,6 +138,10 @@ class ClusterServer:
             self._cohort_nodes = [
                 np.asarray([pair_node[p] for p in pairs], np.int64)
                 for pairs in self._cohort_pairs]
+        # per-cohort stacked-dispatch participation (host-side counter: the
+        # dispatch result already carries the count, no extra device sync)
+        self._cohort_part = self.metrics.counter(
+            "cohort_participants", max(len(self._cohorts), 1))
         self.inflight: Dict[int, _Flight] = {}
         self.transfers: Dict[int, _Transfer] = {}   # KV handoffs in flight
         self.done: Dict[int, dict] = {}
@@ -159,6 +180,9 @@ class ClusterServer:
                    max_new_tokens=sreq.max_new_tokens)
         node = int(np.asarray(self.router.arrays.pair_node)[pair])
         self.monitor.on_dispatch(node)
+        # span event mirrors the monitor accounting call one-for-one
+        self.tracer.event(sreq.request_id, "dispatch", self.ticks,
+                          node=node, pair=pair)
         # keep the monitor's prefix-cache view in sync with what this node's
         # engine now holds (cache-affinity routing reads it)
         req = sreq.req
@@ -174,7 +198,8 @@ class ClusterServer:
                 int(getattr(req, "sys_tokens", 0)) // blk * blk)
 
     def _start_handoff(self, sreq: ServeRequest, prefill_pair: int,
-                       decode_pair: int) -> bool:
+                       decode_pair: int, category: int = -1,
+                       est_cost: float = 0.0) -> bool:
         """Disaggregated dispatch: run the prefill leg now, put the exported
         KV on the transfer-in-flight queue. Returns False when the route
         cannot hand off (no paged stores, same node, or nothing block-aligned
@@ -193,12 +218,16 @@ class ClusterServer:
         if len(tokens) < bs:
             return False   # no whole block to ship
         self.monitor.on_dispatch(node_p)
+        self.tracer.event(sreq.request_id, "dispatch", self.ticks,
+                          node=node_p, pair=prefill_pair)
         block_ids = eng_p.prefill_only(sreq.request_id, tokens)
         n_cov = len(block_ids) * bs
         if not block_ids:
             # pool exhausted before the first block: close the prefill leg
             # and fall back to a colocated full prefill
             self.monitor.on_cancel(node_p)
+            self.tracer.event(sreq.request_id, "cancel", self.ticks,
+                              node=node_p)
             return False
         payload = eng_p.export_kv(block_ids)
         kv_bytes = float(n_cov) * float(arr.pair_kv_bytes_per_token[
@@ -209,8 +238,12 @@ class ClusterServer:
         self.transfers[sreq.request_id] = _Transfer(
             sreq=sreq, prefill_pair=prefill_pair, decode_pair=decode_pair,
             block_ids=block_ids, tokens=tokens, n_cov=n_cov, payload=payload,
-            depart_tick=self.ticks, eta=self.ticks + ticks)
+            depart_tick=self.ticks, eta=self.ticks + ticks,
+            category=category, est_cost=est_cost)
         self._handoffs += 1
+        self.tracer.event(sreq.request_id, "handoff-start", self.ticks,
+                          node=node_p, decode_node=node_q,
+                          eta=self.ticks + ticks)
         return True
 
     def _route_dispatch(self, sreq: ServeRequest, iters: int = 0):
@@ -218,20 +251,30 @@ class ClusterServer:
         through the KV-handoff pipeline when a route-valued policy split the
         (prefill, decode) legs across nodes."""
         decision = self.router.route(sreq.req)
+        cat = int(decision.features[1])
+        self.tracer.set_category(sreq.request_id, cat)
+        self.tracer.event(sreq.request_id, "route-decision", self.ticks,
+                          pair=decision.pair, node=decision.node,
+                          prefill_pair=decision.prefill_pair)
         if (decision.prefill_pair is not None
                 and decision.prefill_pair != decision.pair
                 and self._start_handoff(sreq, decision.prefill_pair,
-                                        decision.pair)):
+                                        decision.pair, category=cat,
+                                        est_cost=decision.est_cost)):
             return decision
         self._dispatch(sreq, decision.pair)
         self.inflight[sreq.request_id] = _Flight(sreq=sreq,
                                                  pair=decision.pair,
                                                  iters=iters,
-                                                 depart_tick=self.ticks)
+                                                 depart_tick=self.ticks,
+                                                 category=cat,
+                                                 est_cost=decision.est_cost)
         return decision
 
     # -- public ------------------------------------------------------------------
     def submit(self, sreq: ServeRequest):
+        # the span opens once here; reroutes/hedges reuse the open span
+        self.tracer.begin(sreq.request_id, self.ticks)
         self._route_dispatch(sreq)
 
     def fail_node(self, node: int):
@@ -258,10 +301,13 @@ class ClusterServer:
             del self.transfers[rid]
             if node_p == node:
                 self.monitor.on_failure(node_p)
+                self.tracer.event(rid, "failure", self.ticks, node=node_p)
             else:
                 self.engines[tr.prefill_pair].release_export(tr.block_ids)
                 self.monitor.on_cancel(node_p)
+                self.tracer.event(rid, "cancel", self.ticks, node=node_p)
             self._reroutes += 1
+            self.tracer.event(rid, "reroute", self.ticks, node=node)
             self._route_dispatch(tr.sreq)
         for rid, fl in list(self.inflight.items()):
             hedge_dead = (fl.hedge_pair is not None
@@ -269,13 +315,21 @@ class ClusterServer:
             if hedge_dead:
                 self.engines[fl.hedge_pair].cancel(rid)
                 self.monitor.on_failure(node)
+                self.tracer.event(rid, "failure", self.ticks, node=node)
                 fl.hedge_pair = None
             if int(pair_node[fl.pair]) == node:
                 self._reroutes += 1
                 self.engines[fl.pair].cancel(rid)
                 self.monitor.on_failure(node)
+                self.tracer.event(rid, "failure", self.ticks, node=node)
+                self.tracer.event(rid, "reroute", self.ticks, node=node)
                 decision = self.router.route(fl.sreq.req)
                 assert int(pair_node[decision.pair]) != node
+                cat = int(decision.features[1])
+                self.tracer.set_category(rid, cat)
+                self.tracer.event(rid, "route-decision", self.ticks,
+                                  pair=decision.pair, node=decision.node,
+                                  prefill_pair=decision.prefill_pair)
                 self._dispatch(fl.sreq, decision.pair)
                 # keep the original depart tick: the monitor's completion
                 # latency measures end-to-end ticks since first dispatch,
@@ -283,7 +337,9 @@ class ClusterServer:
                 self.inflight[rid] = _Flight(sreq=fl.sreq, pair=decision.pair,
                                              iters=fl.iters,
                                              hedge_pair=fl.hedge_pair,
-                                             depart_tick=fl.depart_tick)
+                                             depart_tick=fl.depart_tick,
+                                             category=cat,
+                                             est_cost=decision.est_cost)
         # dead copies are cancelled above, so no slot still pins a block
         for pair, eng in self.engines.items():
             if int(pair_node[pair]) == node:
@@ -319,13 +375,21 @@ class ClusterServer:
             del self.transfers[rid]
             node_p = int(pair_node[tr.prefill_pair])
             self.engines[tr.prefill_pair].release_export(tr.block_ids)
-            self.monitor.on_complete(
-                node_p, latency=float(self.ticks - tr.depart_tick))
+            lat = float(self.ticks - tr.depart_tick)
+            self.monitor.on_complete(node_p, latency=lat)
+            self.metrics.observe("transfer", lat, node=node_p,
+                                 category=tr.category)
+            if self.tracer.enabled:
+                self.tracer.phase(rid, "kv-transfer", tr.depart_tick, lat,
+                                  node_p)
+                self.tracer.event(rid, "complete", self.ticks, node=node_p)
             self.engines[tr.decode_pair].import_kv(
                 tr.tokens[:tr.n_cov], tr.payload)
             self._dispatch(tr.sreq, tr.decode_pair)
             self.inflight[rid] = _Flight(sreq=tr.sreq, pair=tr.decode_pair,
-                                         depart_tick=self.ticks)
+                                         depart_tick=self.ticks,
+                                         category=tr.category,
+                                         est_cost=tr.est_cost)
         healthy = self.monitor.healthy_mask()
         # phase A — fleet data plane: one stacked decode dispatch per cohort.
         # Members mid-admission (queued work at chunk > 1), empty, or on a
@@ -346,6 +410,7 @@ class ClusterServer:
             # fleet counters straight off the stacked retirement mask
             self.monitor.record_fleet(self._cohort_nodes[ci],
                                       res.emitted, res.retired)
+            self._cohort_part.add(ci, res.participants)
             for m, w in res.work.items():
                 chunk_work[pairs[m]] = w
         # phase B — host control plane, in pair order
@@ -363,13 +428,32 @@ class ClusterServer:
             for rid in retired:
                 if rid in self.inflight:
                     fl = self.inflight.pop(rid)
-                    self.done[rid] = eng.results[rid]
+                    res = eng.results[rid]
+                    self.done[rid] = res
                     # completion latency in scheduler ticks — the same unit
                     # KV-handoff deliveries record — not decode iterations,
                     # which diverge by a factor of `chunk` when chunking
-                    self.monitor.on_complete(
-                        node,
-                        latency=float(max(self.ticks - fl.depart_tick, 1)))
+                    lat = float(max(self.ticks - fl.depart_tick, 1))
+                    self.monitor.on_complete(node, latency=lat)
+                    # QoE metrics come from the engine's step clock (decode
+                    # iterations); the span phase stays in scheduler ticks
+                    # so phase durations match monitor latencies exactly
+                    m = self.metrics
+                    m.observe("ttft", float(res["ttft_steps"]), node=node,
+                              category=fl.category)
+                    m.observe("tpot", float(res["tpot_steps"]), node=node,
+                              category=fl.category)
+                    m.observe("queue_wait", float(res["ttft_steps"]),
+                              node=node, category=fl.category)
+                    m.observe("cache_hit_frac", float(res["cached_frac"]),
+                              node=node, category=fl.category)
+                    m.observe("spend", float(fl.est_cost), node=node,
+                              category=fl.category)
+                    if self.tracer.enabled:
+                        self.tracer.phase(rid, "serve", fl.depart_tick, lat,
+                                          node)
+                        self.tracer.event(rid, "complete", self.ticks,
+                                          node=node)
                     if fl.hedge_pair is not None:
                         # first completion wins: cancel the losing copy and
                         # close its dispatch accounting, or `outstanding`
@@ -380,6 +464,9 @@ class ClusterServer:
                         # exactly one dispatch was charged to the loser node;
                         # close it even if the copy already drained
                         self.monitor.on_cancel(int(pair_node[loser]))
+                        self.tracer.event(rid, "cancel", self.ticks,
+                                          node=int(pair_node[loser]))
+                    self.tracer.end(rid, self.ticks, "completed")
         # straggler hedging: age each request by its own engine's progress
         # (min 1 keeps the chunk=1 semantics for idle/crashed engines)
         for rid, fl in list(self.inflight.items()):
@@ -389,6 +476,9 @@ class ClusterServer:
                 if backup is not None:
                     fl.hedge_pair = backup
                     self._hedges += 1
+                    self.tracer.event(
+                        rid, "hedge", self.ticks,
+                        node=int(pair_node[backup]), pair=backup)
                     self._dispatch(fl.sreq, backup)
 
     def run(self, max_ticks: int = 2000, chunk: int = 1) -> Dict[int, dict]:
@@ -447,4 +537,7 @@ class ClusterServer:
                 "queued": self.queue_len,
                 "decode_dispatches": self.decode_dispatches,
                 "cohorts": cohorts,
-                "fleet": self.monitor.fleet_totals()}
+                "fleet": self.monitor.fleet_totals(),
+                "percentiles": self.metrics.summary(
+                    names=("latency", "ttft", "tpot", "queue_wait",
+                           "transfer", "cache_hit_frac", "spend"))}

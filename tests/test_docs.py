@@ -89,3 +89,32 @@ def test_readme_and_bench_readme_name_fleet():
     bench = (REPO / "benchmarks" / "README.md").read_text()
     assert "fleet_scale.py" in bench and "fleet_testbed" in bench
     assert "dispatches per saturated tick" in bench
+
+
+def test_architecture_doc_has_observability_section():
+    """The observability section must exist and cover the span model, the
+    metric vocabulary, clock discipline, the audit, export, and the
+    overhead budget."""
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "## Observability" in doc
+    for needle in ("span conservation", "accounting mirror", "NOOP_TRACER",
+                   "MetricsRegistry", "RouteAudit", "chrome_trace",
+                   "Obs.noop()", "kv-transfer", "route-decision",
+                   "scheduler ticks", "byte-identical",
+                   'stats()["percentiles"]', "ewma_initialized",
+                   "DeprecationWarning"):
+        assert needle in doc, f"observability docs miss: {needle}"
+    # the documented vocabulary stays in lockstep with the code
+    from repro.obs.metrics import METRIC_NAMES
+    from repro.obs.trace import EVENT_NAMES, PHASE_NAMES
+    for name in PHASE_NAMES + EVENT_NAMES + METRIC_NAMES:
+        assert name in doc, f"observability docs miss vocabulary: {name}"
+
+
+def test_readme_and_bench_readme_name_obs():
+    readme = (REPO / "README.md").read_text()
+    assert "src/repro/obs/" in readme and "obs_overhead.py" in readme
+    assert "p50/p95/p99" in readme
+    bench = (REPO / "benchmarks" / "README.md").read_text()
+    assert "obs_overhead.py" in bench and "BENCH_obs.json" in bench
+    assert "Chrome-trace" in bench
