@@ -10,10 +10,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (disagg, fig2_quality, fig3_tradeoff, fig4_concurrency,
-                   fleet_scale, hotpath, nsga2_perf, obs_overhead,
-                   online_drift, policy_matrix, prefix_reuse, roofline,
-                   slo_attainment, table2_routing)
+    from . import (chaos, disagg, fig2_quality, fig3_tradeoff,
+                   fig4_concurrency, fleet_scale, hotpath, nsga2_perf,
+                   obs_overhead, online_drift, policy_matrix, prefix_reuse,
+                   roofline, slo_attainment, table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
@@ -23,6 +23,7 @@ def main() -> None:
                ("prefix_reuse", prefix_reuse),
                ("policy_matrix", policy_matrix),
                ("disagg", disagg),
+               ("chaos", chaos),
                ("nsga2_perf", nsga2_perf),
                ("fleet_scale", fleet_scale),
                ("obs_overhead", obs_overhead),

@@ -57,6 +57,15 @@ class NodeStats:
     # cached-prefix fraction per candidate node.
     cached_prefixes: Dict[Tuple[str, int], int] = dataclasses.field(
         default_factory=dict)
+    # circuit breaker (closed -> open on error-rate EWMA, open -> half-open
+    # after a cooldown, half-open admits ONE probe whose outcome decides
+    # closed vs re-open). Inert unless the monitor was built with
+    # ``breaker_threshold``.
+    breaker_state: str = "closed"
+    err_ewma: float = 0.0
+    err_obs: int = 0
+    breaker_opened_at: float = 0.0
+    probe_inflight: bool = False
 
 
 class ClusterMonitor:
@@ -65,10 +74,26 @@ class ClusterMonitor:
 
     def __init__(self, n_nodes: int, heartbeat_timeout: float = 10.0,
                  now: float = 0.0,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 breaker_threshold: Optional[float] = None,
+                 breaker_alpha: float = 0.3, breaker_min_obs: int = 4,
+                 breaker_cooldown: float = 20.0):
         self.stats: Dict[int, NodeStats] = {
             j: NodeStats(last_heartbeat=now) for j in range(n_nodes)}
         self.heartbeat_timeout = heartbeat_timeout
+        # the monitor's own clock: every caller advances it explicitly
+        # (simulated seconds under the DES, scheduler ticks when serving)
+        # via :meth:`advance` — heartbeats, staleness expiry, and breaker
+        # cooldowns all live in this ONE domain, never mixed with wall time
+        self.now = now
+        # per-node circuit breakers: disabled unless a threshold is given
+        # (error-rate EWMA >= threshold after >= min_obs observations opens
+        # the breaker; after ``breaker_cooldown`` clock units it admits one
+        # half-open probe whose outcome decides closed vs re-open)
+        self.breaker_threshold = breaker_threshold
+        self.breaker_alpha = breaker_alpha
+        self.breaker_min_obs = breaker_min_obs
+        self.breaker_cooldown = breaker_cooldown
         # all monitor series live in one queryable MetricsRegistry (shared
         # with the scheduler's when serving; private otherwise)
         self.metrics = MetricsRegistry() if metrics is None else metrics
@@ -81,12 +106,18 @@ class ClusterMonitor:
             "fleet_tokens_emitted", n_nodes).values
         self.fleet_retired = self.metrics.counter(
             "fleet_slots_retired", n_nodes).values
+        self.breaker_opens = self.metrics.counter(
+            "breaker_open_total", n_nodes).values
 
     # -- data plane callbacks -------------------------------------------------
     def on_dispatch(self, node: int) -> None:
         s = self.stats[node]
         s.outstanding += 1
         s.total_dispatched += 1
+        # the first dispatch into a half-open breaker is its probe; until
+        # it resolves, healthy_mask hides the node again
+        if s.breaker_state == "half-open" and not s.probe_inflight:
+            s.probe_inflight = True
 
     def on_complete(self, node: int, latency: float) -> None:
         s = self.stats[node]
@@ -105,11 +136,13 @@ class ClusterMonitor:
             s.ewma_slow = (s.alpha_slow * latency
                            + (1 - s.alpha_slow) * s.ewma_slow)
         self.metrics.observe("latency", latency, node=node)
+        self._breaker_observe(node, 0.0)
 
     def on_failure(self, node: int) -> None:
         s = self.stats[node]
         s.outstanding = max(0, s.outstanding - 1)
         s.total_failed += 1
+        self._breaker_observe(node, 1.0)
 
     def on_cancel(self, node: int) -> None:
         """A dispatched request was cancelled (e.g. a hedged duplicate lost
@@ -161,6 +194,61 @@ class ClusterMonitor:
             if now - s.last_heartbeat > self.heartbeat_timeout:
                 s.healthy = False
 
+    def advance(self, now: float) -> None:
+        """Advance the monitor's clock to ``now`` (the caller's domain —
+        scheduler ticks or simulated seconds): expires stale heartbeats and
+        moves cooled-down open breakers to half-open (one probe admitted).
+        The one clock entry point a periodic caller needs."""
+        self.now = now
+        self.sweep(now)
+        if self.breaker_threshold is None:
+            return
+        for s in self.stats.values():
+            if (s.breaker_state == "open"
+                    and now - s.breaker_opened_at >= self.breaker_cooldown):
+                s.breaker_state = "half-open"
+                s.probe_inflight = False
+
+    # -- circuit breakers ------------------------------------------------------
+    def _breaker_observe(self, node: int, err: float) -> None:
+        """Feed one request outcome (0 = success, 1 = failure) into the
+        node's breaker state machine. No-op when breakers are disabled."""
+        if self.breaker_threshold is None:
+            return
+        s = self.stats[node]
+        s.err_ewma = (self.breaker_alpha * err
+                      + (1 - self.breaker_alpha) * s.err_ewma)
+        s.err_obs += 1
+        if s.breaker_state == "half-open":
+            if err > 0:                      # the probe failed: re-open
+                s.breaker_state = "open"
+                s.breaker_opened_at = self.now
+                s.probe_inflight = False
+                self.breaker_opens[node] += 1
+            else:                            # the probe succeeded: close
+                s.breaker_state = "closed"
+                s.err_ewma = 0.0
+                s.err_obs = 0
+                s.probe_inflight = False
+        elif (s.breaker_state == "closed" and err > 0
+              and s.err_obs >= self.breaker_min_obs
+              and s.err_ewma >= self.breaker_threshold):
+            s.breaker_state = "open"
+            s.breaker_opened_at = self.now
+            self.breaker_opens[node] += 1
+
+    def reset_breaker(self, node: int) -> None:
+        """Explicit recovery (``ClusterServer.recover_node``): close the
+        breaker and forget its error history."""
+        s = self.stats[node]
+        s.breaker_state = "closed"
+        s.err_ewma = 0.0
+        s.err_obs = 0
+        s.probe_inflight = False
+
+    def breaker_states(self) -> Tuple[str, ...]:
+        return tuple(self.stats[j].breaker_state for j in sorted(self.stats))
+
     # -- prefix-cache state (cache-affinity routing) ---------------------------
     def record_prefix(self, node: int, key: Tuple[str, int],
                       tokens: int) -> None:
@@ -201,7 +289,13 @@ class ClusterMonitor:
         return tuple(self.stats[j].outstanding for j in sorted(self.stats))
 
     def healthy_mask(self) -> Tuple[bool, ...]:
-        return tuple(self.stats[j].healthy for j in sorted(self.stats))
+        """Routable nodes: heartbeat-healthy AND breaker not open (a
+        half-open breaker exposes the node only until its probe departs)."""
+        def ok(s: NodeStats) -> bool:
+            if not s.healthy or s.breaker_state == "open":
+                return False
+            return not (s.breaker_state == "half-open" and s.probe_inflight)
+        return tuple(ok(self.stats[j]) for j in sorted(self.stats))
 
     def straggler_threshold(self, node: int, factor: float = 3.0) -> float:
         """Hedge a request if it exceeds factor × EWMA latency of its node."""

@@ -36,6 +36,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.policies import PolicyInputs, get_policy
+from ..faults import (FaultSchedule, link_slowdown_np, node_available_np,
+                      node_slowdown_np, transient_delay_np)
 from ..obs.trace import NOOP_TRACER
 from ..workload.trace import Trace
 from .spec import ClusterSpec
@@ -87,7 +89,7 @@ class ClusterSimulator:
 
     def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0,
                  prefix_cache: bool = False, cache_block: int = 16,
-                 disaggregated: bool = False):
+                 disaggregated: bool = False, faults=None):
         if prefix_cache:
             assert trace.has_sessions and trace.has_arrivals, \
                 "prefix_cache needs an open-loop session trace"
@@ -119,6 +121,46 @@ class ClusterSimulator:
             int(p): r for r, (p, q_) in enumerate(
                 zip(self.np_arrays.route_prefill,
                     self.np_arrays.route_decode)) if p == q_}
+        # deterministic fault injection (repro.faults): a FaultSchedule (or
+        # pre-compiled FaultTables) mirrored op-for-op against the JAX
+        # scan's EvalConfig(faulty=True) branches
+        if isinstance(faults, FaultSchedule):
+            faults = faults.compile(len(cluster.nodes))
+        self.faults = faults
+
+    # -- fault-injection mirror ----------------------------------------------
+    def _fault_ctx(self, i: int, arrival: float):
+        """(t_eff, avail, slow, linkf, delay) at request ``i``'s effective
+        arrival — the DES twin of the scan's fault context — or None when
+        no schedule is attached. Float32 arithmetic like the scan."""
+        if self.faults is None:
+            return None
+        ft = self.faults
+        delay = float(transient_delay_np(ft, i))
+        t_eff = float(np.float32(arrival) + np.float32(delay))
+        return (t_eff, node_available_np(ft, t_eff),
+                node_slowdown_np(ft, t_eff),
+                float(link_slowdown_np(ft, t_eff)), delay)
+
+    def _fault_failover(self, decided: int, avail) -> Tuple[int, bool]:
+        """The scan's deterministic failover: if the decision lands on a
+        crashed node, prefer the lowest-index alive cloud pair (alive
+        colocated route when disaggregated), else the lowest alive index."""
+        a = self.np_arrays
+        if self.disaggregated:
+            rp, rq = a.route_prefill, a.route_decode
+            dead = (~avail[self.pair_node[rp]]) | (~avail[self.pair_node[rq]])
+            if not dead[decided]:
+                return decided, False
+            rank = ((rp != rq).astype(np.float32) * np.float32(1e6)
+                    + np.arange(len(rp), dtype=np.float32))
+        else:
+            dead = ~avail[self.pair_node]
+            if not dead[decided]:
+                return decided, False
+            rank = (a.pair_is_edge.astype(np.float32) * np.float32(1e6)
+                    + np.arange(len(dead), dtype=np.float32))
+        return int(np.argmin(np.where(dead, np.inf, rank))), True
 
     # -- prefix-cache mirror (independent of the JAX carry implementation) ----
     def _cache_state(self):
@@ -191,12 +233,22 @@ class ClusterSimulator:
                        np.int32 if pol.genome_spec.discrete else np.float32)
         return pol, g, pol.init_state()
 
-    def _policy_inputs(self, i: int, busy, cache, now: float) -> PolicyInputs:
+    def _policy_inputs(self, i: int, busy, cache, now: float,
+                       avail=None) -> PolicyInputs:
         """The DES twin of the JAX scan's decision context: same float32
         table rows, busy-slot counts at arrival, whole-block cache hit
-        fractions, and deadline contract (+inf without SLOs)."""
+        fractions, and deadline contract (+inf without SLOs). ``avail``
+        (fault injection) masks crashed nodes out of the policy's view with
+        the router's sentinels (queue_len -> 1e6, up -> 1e9)."""
+        from ..core.fitness import DEAD_QUEUE, DEAD_UP
         tr = self.trace
         n_nodes = len(self.cluster.nodes)
+        up_row = self.up[i]
+        queue = np.asarray(busy, np.int64)
+        if avail is not None:
+            queue = np.where(avail, queue, DEAD_QUEUE)
+            up_row = np.where(avail[self.pair_node], up_row,
+                              np.float32(DEAD_UP)).astype(np.float32)
         if cache is not None:
             hit_node = np.asarray(
                 [self._cache_hit(cache, i, n) for n in range(n_nodes)],
@@ -224,9 +276,9 @@ class ClusterSimulator:
             tpot_deadline=np.float32(tr.tpot_deadline[i] if has_slos
                                      else np.inf),
             prompt_tokens=np.float32(tr.prompt_tokens[i]),
-            up=self.up[i], prefill=self.prefill[i], tpot=self.tpot_pair,
+            up=up_row, prefill=self.prefill[i], tpot=self.tpot_pair,
             cost=self.cost[i], prompt_cost=self.prompt_cost[i],
-            hit_frac=hit, queue_len=np.asarray(busy, np.int64),
+            hit_frac=hit, queue_len=queue,
             kv_bytes=kv_bytes)
 
     # -- observability emission (shared by both oracles, so the span and
@@ -300,7 +352,7 @@ class ClusterSimulator:
 
     # -- disaggregated execution (shared by both oracles) --------------------
     def _disagg_exec(self, cache, i: int, route: int, slots, arrival: float,
-                     tracer=NOOP_TRACER):
+                     tracer=NOOP_TRACER, fc=None):
         """Greedy-at-issue execution of one request over route ``route``:
         prefill leg, KV transfer (0 on colocated routes), decode leg.
         Mirrors the JAX scan's disaggregated arithmetic op-for-op; mutates
@@ -325,7 +377,18 @@ class ClusterSimulator:
                   * (1.0 - hf * (1.0 - CACHED_TOKEN_PRICE_FACTOR))
                   + (self.cost[i, qd] - self.prompt_cost[i, qd])
                   + kv_b * float(a.kv_egress[node_p, node_q]))
-        ready = arrival + self.up[i, p]
+        slow_q = 1.0
+        if fc is not None:
+            # straggler factors per leg, link flap on the transfer, transient
+            # delay shifting the effective arrival (scan mirror)
+            t_eff, _, slow, linkf, _ = fc
+            prefill_eff = prefill_eff * float(slow[node_p])
+            slow_q = float(slow[node_q])
+            decode_t = decode_t * slow_q
+            tt = tt * linkf
+            ready = t_eff + self.up[i, p]
+        else:
+            ready = arrival + self.up[i, p]
         s_p = int(np.argmin(slots[node_p]))
         start_p = max(ready, slots[node_p][s_p])
         wait_p = start_p - ready
@@ -371,7 +434,8 @@ class ClusterSimulator:
                 "wait": wait_p + wait_d,
                 "ttft": (start_p + prefill_eff) - arrival,
                 "transfer": transfer, "completion": completion,
-                "q": self.quality[i, qd], "tpot": self.tpot_pair[qd],
+                "q": self.quality[i, qd],
+                "tpot": self.tpot_pair[qd] * slow_q,
                 "busy": ((node_p, prefill_eff), (node_q, decode_t))}
 
     def run(self, assign: Optional[Sequence[int]] = None,
@@ -437,21 +501,30 @@ class ClusterSimulator:
             c = i % G
             arrival = (float(arrivals[i]) if arrivals is not None
                        else client_ready[c])
+            fc = self._fault_ctx(i, arrival)
+            t_dec = arrival if fc is None else fc[0]
             if pol is not None:
-                busy_slots = [sum(1 for f in slots[n] if f > arrival)
+                busy_slots = [sum(1 for f in slots[n] if f > t_dec)
                               for n in range(n_nodes)]
-                inp = self._policy_inputs(i, busy_slots, cache, arrival)
+                inp = self._policy_inputs(
+                    i, busy_slots, cache, t_dec,
+                    avail=None if fc is None else fc[1])
                 pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
             else:
                 inp = None
                 pair = int(assign[i])
             raw = pair
+            fault_failover = None
+            if fc is not None:
+                pair, fo = self._fault_failover(pair, fc[1])
+                if fo:
+                    fault_failover = "fault-node-down"
 
             if self.disaggregated:
                 # ``pair`` is a route index here; crash windows on either
                 # endpoint fall back to a colocated route
                 route = pair
-                failover = None
+                failover = fault_failover
                 a_ = self.np_arrays
                 ends = {int(self.pair_node[a_.route_prefill[route]]),
                         int(self.pair_node[a_.route_decode[route]])}
@@ -468,7 +541,7 @@ class ClusterSimulator:
                 self._trace_issue(tracer, audit, i, arrival, pol, g, inp,
                                   raw, route, failover)
                 row = self._disagg_exec(cache, i, route, slots, arrival,
-                                        tracer=tracer)
+                                        tracer=tracer, fc=fc)
                 client_ready[c] = row["completion"]
                 if pol is not None:
                     pstate = pol.update_py(g, pstate, inp, row["pair"],
@@ -484,7 +557,7 @@ class ClusterSimulator:
                 continue
             node = int(self.pair_node[pair])
 
-            failover = None
+            failover = fault_failover
             if node in down_nodes:
                 t_down, t_up = down_nodes[node]
                 if t_down <= arrival < t_up:
@@ -497,7 +570,14 @@ class ClusterSimulator:
 
             hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
                                                                 pair)
-            ready = arrival + self.up[i, pair]
+            slow_n = 1.0
+            if fc is not None:
+                slow_n = float(fc[2][node])
+                service_i = service_i * slow_n
+                prefill_i = prefill_i * slow_n
+                ready = fc[0] + self.up[i, pair]
+            else:
+                ready = arrival + self.up[i, pair]
             s = int(np.argmin(slots[node]))
             start = max(ready, slots[node][s])
             finish = start + service_i
@@ -514,7 +594,7 @@ class ClusterSimulator:
             wait[i] = start - ready
             # first token leaves prefill at start + (uncached) prefill_time
             ttft[i] = (start + prefill_i) - arrival
-            tpot[i] = self.tpot_pair[pair]
+            tpot[i] = self.tpot_pair[pair] * slow_n
             hit[i] = hf
             out_assign[i] = pair
             busy[node] += service_i
@@ -578,19 +658,29 @@ class ClusterSimulator:
             t, _, kind, payload = heapq.heappop(heap)
             if kind == "issue":
                 i, c = payload
+                fc = self._fault_ctx(i, t)
+                t_dec = t if fc is None else fc[0]
                 if pol is not None:
-                    busy_slots = [sum(1 for f in node_free[n] if f > t)
+                    busy_slots = [sum(1 for f in node_free[n] if f > t_dec)
                                   for n in range(n_nodes)]
-                    inp = self._policy_inputs(i, busy_slots, cache, t)
+                    inp = self._policy_inputs(
+                        i, busy_slots, cache, t_dec,
+                        avail=None if fc is None else fc[1])
                     pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
                 else:
                     inp = None
                     pair = int(assign[i])
-                self._trace_issue(tracer, audit, i, t, pol, g, inp, pair,
-                                  pair)
+                raw = pair
+                fault_failover = None
+                if fc is not None:
+                    pair, fo = self._fault_failover(pair, fc[1])
+                    if fo:
+                        fault_failover = "fault-node-down"
+                self._trace_issue(tracer, audit, i, t, pol, g, inp, raw,
+                                  pair, fault_failover)
                 if self.disaggregated:
                     row = self._disagg_exec(cache, i, pair, node_free, t,
-                                            tracer=tracer)
+                                            tracer=tracer, fc=fc)
                     if pol is not None:
                         pstate = pol.update_py(g, pstate, inp, row["pair"],
                                                row["cost"])
@@ -608,7 +698,12 @@ class ClusterSimulator:
                 node = int(self.pair_node[pair])
                 hf, service_i, prefill_i, cost_i = self._discounted(cache, i,
                                                                     pair)
-                ready = t + self.up[i, pair]
+                slow_n = 1.0
+                if fc is not None:
+                    slow_n = float(fc[2][node])
+                    service_i = service_i * slow_n
+                    prefill_i = prefill_i * slow_n
+                ready = t_dec + self.up[i, pair]
                 s = int(np.argmin(node_free[node]))
                 start = max(ready, node_free[node][s])
                 finish = start + service_i
@@ -620,7 +715,7 @@ class ClusterSimulator:
                 q[i] = self.quality[i, pair]; cost[i] = cost_i
                 rt[i] = completion - t; wait[i] = start - ready
                 ttft[i] = (start + prefill_i) - t
-                tpot[i] = self.tpot_pair[pair]; hit[i] = hf
+                tpot[i] = self.tpot_pair[pair] * slow_n; hit[i] = hf
                 out_assign[i] = pair; busy[node] += service_i
                 self._trace_colo(tracer, i, t, pair, node, wait[i],
                                  prefill_i, service_i - prefill_i,

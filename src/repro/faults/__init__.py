@@ -1,0 +1,24 @@
+"""Deterministic fault injection: declarative schedules compiled to dense
+tables consumed identically by the fitness scan, both DES oracles, and the
+serving runtime. See ``schedule.py``."""
+from .schedule import (   # noqa: F401
+    CrashWindow,
+    FaultSchedule,
+    FaultTables,
+    HeartbeatLoss,
+    LinkFlap,
+    Straggler,
+    TransientErrors,
+    backoff_jitter_u,
+    heartbeat_lost,
+    jnp_tables,
+    link_slowdown_jnp,
+    link_slowdown_np,
+    node_available_jnp,
+    node_available_np,
+    node_slowdown_jnp,
+    node_slowdown_np,
+    transient_delay_jnp,
+    transient_delay_np,
+    transient_hit_np,
+)

@@ -39,7 +39,7 @@ PHASE_NAMES = ("upload", "queue-wait", "prefill", "kv-transfer",
                "queue-wait-decode", "decode", "download", "serve")
 EVENT_NAMES = ("submit", "route-decision", "dispatch", "hedge", "cancel",
                "failure", "complete", "reroute", "handoff-start", "retire",
-               "cohort-dispatch")
+               "cohort-dispatch", "retry", "timeout", "shed")
 
 
 class Phase(NamedTuple):

@@ -2,8 +2,9 @@ from .engine import EngineConfig, LLMEngine
 from .fleet import Cohort, FleetState, build_cohorts
 from .kvcache import (BlockPool, FleetKVPools, PagedKVCache, PagedKVStore,
                       RadixIndex)
-from .scheduler import ClusterServer, ServeRequest
+from .scheduler import ClusterServer, ResilienceConfig, ServeRequest
 
 __all__ = ["LLMEngine", "EngineConfig", "ClusterServer", "ServeRequest",
+           "ResilienceConfig",
            "BlockPool", "RadixIndex", "PagedKVCache", "PagedKVStore",
            "Cohort", "FleetState", "FleetKVPools", "build_cohorts"]

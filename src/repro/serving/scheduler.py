@@ -23,7 +23,13 @@ drives all engines' continuous-batching loops. Beyond-paper fault tolerance:
   the router's backup pair; first completion wins, the loser is **cancelled**
   (``LLMEngine.cancel``) and its dispatch accounting closed via
   ``monitor.on_cancel`` — queue lengths drain back to zero, so hedging never
-  skews later queue-based routing decisions.
+  skews later queue-based routing decisions;
+* **chaos hardening** — an optional ``repro.faults.FaultSchedule`` replays
+  deterministic crash windows, stragglers (executed-iteration slow-credit),
+  KV-link flaps, heartbeat losses, and transient dispatch errors against the
+  runtime, and a ``ResilienceConfig`` arms deadline-aware timeouts with
+  budgeted jittered retries, per-node circuit breakers (``ClusterMonitor``),
+  and SLO-class load shedding on admission.
 
 The server keeps a simulated clock (``self.ticks``, one unit per ``step``)
 and feeds it to every monitor call that takes a timestamp, so heartbeat /
@@ -42,6 +48,9 @@ import numpy as np
 from ..cluster.monitor import ClusterMonitor
 from ..cluster.spec import ClusterSpec
 from ..core.router import RequestRouter
+from ..faults import (FaultSchedule, backoff_jitter_u, heartbeat_lost,
+                      link_slowdown_np, node_available_np, node_slowdown_np,
+                      transient_hit_np)
 from ..models import lm
 from ..obs import Obs
 from ..workload.datasets import Request
@@ -50,11 +59,47 @@ from .engine import EngineConfig, LLMEngine
 from .fleet import Cohort, build_cohorts
 
 
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs for the server's retry / breaker / shedding machinery.
+
+    Timeouts and backoffs are in scheduler ticks. A request times out after
+    ``min(request_timeout_ticks, deadline_timeout_factor * ttft_slo /
+    tick_seconds)`` iterations of aging (deadline-aware: interactive SLO
+    classes give up and retry sooner than batch ones), is retried at most
+    ``max_retries`` times with deterministic exponential backoff
+    (``backoff_base_ticks * backoff_mult**attempt``, counter-hash jitter —
+    same stream as the analytic layers' ``faults.backoff_jitter_u``), and
+    every retry draws on a **global budget** of ``max(retry_budget_min,
+    retry_budget_frac * total_dispatches)`` so a mass failure degrades to
+    slow-but-bounded instead of a retry storm. ``shed_threshold`` /
+    ``shed_interactive_threshold`` are cluster-utilization fractions
+    (queued+active over total slots) above which ``submit`` sheds batch-class
+    and then all requests. ``breaker_threshold`` feeds the monitor's per-node
+    circuit breakers (error-rate EWMA; ``None`` disables them)."""
+
+    request_timeout_ticks: int = 200
+    deadline_timeout_factor: float = 8.0
+    min_timeout_ticks: int = 24
+    max_retries: int = 2
+    backoff_base_ticks: float = 2.0
+    backoff_mult: float = 2.0
+    jitter: float = 0.5
+    jitter_seed: int = 0x5EED5EED
+    retry_budget_frac: float = 0.2
+    retry_budget_min: int = 8
+    shed_threshold: float = 0.9
+    shed_interactive_threshold: float = 1.5
+    breaker_threshold: Optional[float] = 0.5
+    breaker_cooldown_ticks: float = 50.0
+
+
 @dataclasses.dataclass
 class ServeRequest:
     request_id: int
     req: Request
     max_new_tokens: int = 8
+    slo_class: str = "interactive"   # "interactive" | "batch" (shed order)
 
 
 @dataclasses.dataclass
@@ -66,6 +111,8 @@ class _Flight:
     depart_tick: int = 0   # scheduler tick of the (original) dispatch
     category: int = -1     # classifier category at routing (metrics label)
     est_cost: float = 0.0  # modelled $ of the routed pair (spend metric)
+    attempt: int = 0       # 0 = first dispatch; bumps on each timeout retry
+    timeout_ticks: float = float("inf")   # deadline-aware per-request timeout
 
 
 @dataclasses.dataclass
@@ -96,7 +143,9 @@ class ClusterServer:
                  hedge_after: int = 64, vocab_cap: Optional[int] = None,
                  router_kwargs: Optional[dict] = None,
                  tick_seconds: float = 0.05, fleet: bool = True,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         """model_builders: model name -> (ModelConfig, params).
         router_kwargs: extra RequestRouter arguments (e.g.
         ``mode="affinity"`` for cache-affinity dispatch).
@@ -108,12 +157,31 @@ class ClusterServer:
         on the scheduler-tick clock, the shared metrics registry, and the
         router decision audit. Defaults to ``Obs.noop()``: no span/audit
         recording, but the metrics registry (always owned by the monitor)
-        still feeds ``stats()['percentiles']``."""
+        still feeds ``stats()['percentiles']``.
+        faults: optional ``repro.faults.FaultSchedule`` replayed against the
+        runtime with times in **scheduler ticks** — crash windows fail/recover
+        nodes, stragglers slow their decode rate, link flaps stretch KV
+        handoffs, heartbeat losses go telemetry-dark, transient errors bounce
+        dispatches into the retry path. The same schedule drives the DES
+        oracles and the fitness scan, so a genome tuned under it is tested
+        here against the identical regime.
+        resilience: retry / breaker / shedding knobs (``ResilienceConfig``);
+        defaults on when ``faults`` is given, otherwise off."""
         self.cluster = cluster
         self.obs = Obs.noop() if obs is None else obs
         self.tracer = self.obs.tracer
-        self.monitor = ClusterMonitor(len(cluster.nodes),
-                                      metrics=self.obs.metrics)
+        if faults is not None and resilience is None:
+            resilience = ResilienceConfig()
+        self.resilience = resilience
+        self.fault_schedule = faults
+        self._fault_tables = (faults.compile(len(cluster.nodes))
+                              if faults is not None else None)
+        self.monitor = ClusterMonitor(
+            len(cluster.nodes), metrics=self.obs.metrics,
+            breaker_threshold=(None if resilience is None
+                               else resilience.breaker_threshold),
+            breaker_cooldown=(20.0 if resilience is None
+                              else resilience.breaker_cooldown_ticks))
         self.metrics = self.monitor.metrics  # always a live registry
         rkw = dict(router_kwargs or {})
         rkw.setdefault("audit", self.obs.audit)
@@ -151,6 +219,100 @@ class ClusterServer:
         self._reroutes = 0
         self._handoffs = 0
         self.ticks = 0   # simulated scheduler clock: one unit per step()
+        # resilience state. _down_nodes is the liveness ground truth for
+        # engine progress (a breaker-open or telemetry-dark node is routing-
+        # masked but its engines keep executing); _fault_down tracks which of
+        # those crashes the schedule caused, so schedule-window exits recover
+        # only them and never a manually failed node.
+        self._down_nodes: set = set()
+        self._fault_down: set = set()
+        self._slow_credit = np.zeros(len(cluster.nodes))
+        self._advance = np.ones(len(cluster.nodes), bool)
+        self._transient_done: set = set()   # rids whose transient fault fired
+        self._retry_queue: Dict[int, Tuple[int, ServeRequest, int]] = {}
+        self._retries_spent = 0
+        self._timeouts = 0
+        self._transients = 0
+        self._sheds = 0
+        self._capacity = max(1, engine_cfg.max_slots * len(self.engines))
+
+    # -- resilience helpers ----------------------------------------------------
+    def _timeout_ticks(self, cat: int) -> float:
+        """Deadline-aware timeout: the configured ceiling, tightened to a
+        multiple of the category's TTFT SLO (converted seconds -> ticks) when
+        the router carries one — interactive classes give up and retry long
+        before a batch request would."""
+        rcfg = self.resilience
+        if rcfg is None:
+            return float("inf")
+        t = float(rcfg.request_timeout_ticks)
+        slo = getattr(self.router, "_slo_ttft", None)
+        if slo is not None and 0 <= cat < len(slo):
+            dl = float(np.asarray(slo)[cat])
+            if np.isfinite(dl):
+                t = min(t, max(float(rcfg.min_timeout_ticks),
+                               rcfg.deadline_timeout_factor * dl
+                               / self.tick_seconds))
+        return t
+
+    def _retry_budget_ok(self) -> bool:
+        """Global anti-storm budget: total retries so far must stay under a
+        fraction of total dispatches (with a floor so a cold cluster can
+        still retry at all)."""
+        rcfg = self.resilience
+        total = sum(s.total_dispatched for s in self.monitor.stats.values())
+        budget = max(rcfg.retry_budget_min,
+                     int(rcfg.retry_budget_frac * total))
+        return self._retries_spent < budget
+
+    def _schedule_retry(self, sreq: ServeRequest, attempt: int) -> None:
+        """Queue a retry after deterministic exponential backoff with
+        counter-hash jitter — same ``backoff_jitter_u`` stream the analytic
+        layers use, so a replayed schedule reproduces the exact retry times."""
+        rcfg = self.resilience
+        self._retries_spent += 1
+        u = backoff_jitter_u(rcfg.jitter_seed, sreq.request_id, attempt)
+        back = rcfg.backoff_base_ticks * (rcfg.backoff_mult ** attempt)
+        due = self.ticks + max(1, int(round(back * (1.0 + rcfg.jitter * u))))
+        self._retry_queue[sreq.request_id] = (due, sreq, attempt + 1)
+
+    def _fault_tick(self) -> None:
+        """Replay this tick's slice of the fault schedule and advance the
+        monitor clock. Crash-window entries ``fail_node`` (once), exits
+        ``recover_node`` only schedule-crashed nodes; every live node then
+        auto-heartbeats unless its heartbeat is schedule-lost (node alive,
+        telemetry dark -> staleness masks it from routing while its engines
+        keep running); ``monitor.advance`` runs the staleness sweep and
+        breaker cooldowns on the tick clock. Straggler slowdown integrates
+        **slow-credit**: a node at factor s earns 1/s credit per tick and its
+        engines execute a decode iteration only on ticks where credit >= 1 —
+        executed-iteration scaling, the runtime twin of the oracles'
+        service-time scaling."""
+        n = len(self.cluster.nodes)
+        t = np.float32(self.ticks)
+        ft = self._fault_tables
+        if ft is not None:
+            avail = node_available_np(ft, t)
+            for node in range(n):
+                if not avail[node] and node not in self._down_nodes:
+                    self._fault_down.add(node)
+                    self.fail_node(node)
+                elif avail[node] and node in self._fault_down:
+                    self.recover_node(node)
+        for node in range(n):
+            if node in self._down_nodes:
+                continue
+            if (self.fault_schedule is not None
+                    and heartbeat_lost(self.fault_schedule, node, float(t))):
+                continue
+            self.monitor.heartbeat(node, now=self.ticks)
+        self.monitor.advance(float(self.ticks))
+        if ft is not None:
+            slow = node_slowdown_np(ft, t)
+            self._slow_credit += 1.0 / np.maximum(slow, 1.0)
+            adv = self._slow_credit >= 1.0 - 1e-9
+            self._slow_credit[adv] -= 1.0
+            self._advance = adv
 
     # -- helpers ---------------------------------------------------------------
     def _tokenize(self, req: Request, vocab: int, cap: int = 24) -> np.ndarray:
@@ -234,6 +396,10 @@ class ClusterServer:
             prefill_pair])
         tt = float(arr.kv_lat[node_p, node_q]) + \
             kv_bytes * float(arr.kv_inv_bw[node_p, node_q])
+        if self._fault_tables is not None:
+            # a degraded/flapping KV link stretches the transfer in flight
+            tt *= float(link_slowdown_np(self._fault_tables,
+                                         np.float32(self.ticks)))
         ticks = max(1, int(np.ceil(tt / self.tick_seconds)))
         self.transfers[sreq.request_id] = _Transfer(
             sreq=sreq, prefill_pair=prefill_pair, decode_pair=decode_pair,
@@ -246,16 +412,42 @@ class ClusterServer:
                           eta=self.ticks + ticks)
         return True
 
-    def _route_dispatch(self, sreq: ServeRequest, iters: int = 0):
+    def _route_dispatch(self, sreq: ServeRequest, iters: int = 0,
+                        attempt: int = 0):
         """Route one request and dispatch it — colocated into an engine, or
         through the KV-handoff pipeline when a route-valued policy split the
-        (prefill, decode) legs across nodes."""
+        (prefill, decode) legs across nodes. ``attempt`` counts timeout
+        retries of this request (aging restarts; the retry keeps its span)."""
         decision = self.router.route(sreq.req)
         cat = int(decision.features[1])
         self.tracer.set_category(sreq.request_id, cat)
         self.tracer.event(sreq.request_id, "route-decision", self.ticks,
                           pair=decision.pair, node=decision.node,
                           prefill_pair=decision.prefill_pair)
+        rcfg = self.resilience
+        ft = self._fault_tables
+        if (ft is not None and rcfg is not None
+                and float(ft.err_rate) > 0.0
+                and sreq.request_id not in self._transient_done
+                and transient_hit_np(ft, sreq.request_id)):
+            # deterministic transient dispatch error (same counter-hash draw
+            # as the analytic layers' per-request delay): charge one failed
+            # dispatch to the routed node — breaker food — and bounce the
+            # request into the backoff/retry queue. Fires at most once per
+            # request, mirroring the oracles' one-shot delay semantics.
+            self._transient_done.add(sreq.request_id)
+            self._transients += 1
+            node = decision.node
+            self.monitor.on_dispatch(node)
+            self.monitor.on_failure(node)
+            self.tracer.event(sreq.request_id, "failure", self.ticks,
+                              node=node, transient=True)
+            if attempt < rcfg.max_retries:
+                self._schedule_retry(sreq, attempt)
+            else:
+                self.tracer.end(sreq.request_id, self.ticks, "failed")
+                self.done[sreq.request_id] = {"status": "failed"}
+            return decision
         if (decision.prefill_pair is not None
                 and decision.prefill_pair != decision.pair
                 and self._start_handoff(sreq, decision.prefill_pair,
@@ -263,18 +455,33 @@ class ClusterServer:
                                         est_cost=decision.est_cost)):
             return decision
         self._dispatch(sreq, decision.pair)
-        self.inflight[sreq.request_id] = _Flight(sreq=sreq,
-                                                 pair=decision.pair,
-                                                 iters=iters,
-                                                 depart_tick=self.ticks,
-                                                 category=cat,
-                                                 est_cost=decision.est_cost)
+        self.inflight[sreq.request_id] = _Flight(
+            sreq=sreq, pair=decision.pair, iters=iters,
+            depart_tick=self.ticks, category=cat,
+            est_cost=decision.est_cost, attempt=attempt,
+            timeout_ticks=self._timeout_ticks(cat))
         return decision
 
     # -- public ------------------------------------------------------------------
     def submit(self, sreq: ServeRequest):
         # the span opens once here; reroutes/hedges reuse the open span
         self.tracer.begin(sreq.request_id, self.ticks)
+        rcfg = self.resilience
+        if rcfg is not None:
+            # graceful load shedding, by SLO class: above shed_threshold the
+            # cluster stops admitting batch-class work; above the (higher)
+            # interactive threshold it sheds everything. An immediate cheap
+            # rejection beats queueing work that will blow its deadline and
+            # steal slots from requests that could still meet theirs.
+            util = self.queue_len / self._capacity
+            if (util >= rcfg.shed_interactive_threshold
+                    or (util >= rcfg.shed_threshold
+                        and sreq.slo_class == "batch")):
+                self._sheds += 1
+                self.tracer.event(sreq.request_id, "shed", self.ticks)
+                self.tracer.end(sreq.request_id, self.ticks, "shed")
+                self.done[sreq.request_id] = {"status": "shed"}
+                return
         self._route_dispatch(sreq)
 
     def fail_node(self, node: int):
@@ -283,6 +490,7 @@ class ClusterServer:
         recovery), its dispatch accounting closed as a failure, and the
         node's KV caches flushed — a restarted node holds no prefixes, so
         neither may the monitor's residency view nor its engines' pools."""
+        self._down_nodes.add(node)
         self.monitor.mark_down(node)
         self.monitor.drop_prefixes(node)
         pair_node = np.asarray(self.router.arrays.pair_node)
@@ -347,7 +555,13 @@ class ClusterServer:
 
     def recover_node(self, node: int, now: Optional[float] = None):
         """Heartbeat the node back to life at simulated-scheduler time (or an
-        explicit ``now``) — never at wall-clock ``time.monotonic()``."""
+        explicit ``now``) — never at wall-clock ``time.monotonic()``. Explicit
+        recovery is the ONE place a circuit breaker resets to closed: the
+        per-tick auto-heartbeat deliberately never touches breakers, or they
+        would re-close the instant they opened."""
+        self._down_nodes.discard(node)
+        self._fault_down.discard(node)
+        self.monitor.reset_breaker(node)
         self.monitor.heartbeat(node, now=self.ticks if now is None else now)
 
     def step(self, chunk: int = 1):
@@ -364,6 +578,10 @@ class ClusterServer:
         clock stays one tick per call."""
         self.ticks += 1
         pair_node = np.asarray(self.router.arrays.pair_node)
+        # fault schedule + monitor clock first: crash/recover transitions,
+        # heartbeats (minus schedule-lost ones), breaker cooldowns, and the
+        # straggler slow-credit mask all apply to THIS tick's work below
+        self._fault_tick()
         # deliver due KV handoffs: drop the source's export pins, land the
         # payload in the decode engine's pool (a full pool degrades to a
         # plain re-prefill — outputs stay byte-identical either way) and
@@ -383,25 +601,52 @@ class ClusterServer:
                 self.tracer.phase(rid, "kv-transfer", tr.depart_tick, lat,
                                   node_p)
                 self.tracer.event(rid, "complete", self.ticks, node=node_p)
-            self.engines[tr.decode_pair].import_kv(
-                tr.tokens[:tr.n_cov], tr.payload)
-            self._dispatch(tr.sreq, tr.decode_pair)
-            self.inflight[rid] = _Flight(sreq=tr.sreq, pair=tr.decode_pair,
-                                         depart_tick=self.ticks,
-                                         category=tr.category,
-                                         est_cost=tr.est_cost)
-        healthy = self.monitor.healthy_mask()
+            try:
+                self.engines[tr.decode_pair].import_kv(
+                    tr.tokens[:tr.n_cov], tr.payload)
+                self._dispatch(tr.sreq, tr.decode_pair)
+            except Exception:
+                # delivery blew up mid-import: the decode pool may hold a
+                # partial landing, so crash the node (flushes its pools back
+                # to the refcount baseline, reroutes its flights) and send
+                # this request back through routing with a full re-prefill
+                node_q = int(pair_node[tr.decode_pair])
+                self.monitor.on_dispatch(node_q)
+                self.monitor.on_failure(node_q)
+                self.tracer.event(rid, "failure", self.ticks, node=node_q)
+                if node_q not in self._down_nodes:
+                    self.fail_node(node_q)
+                self._reroutes += 1
+                self.tracer.event(rid, "reroute", self.ticks, node=node_q)
+                self._route_dispatch(tr.sreq)
+                continue
+            self.inflight[rid] = _Flight(
+                sreq=tr.sreq, pair=tr.decode_pair, depart_tick=self.ticks,
+                category=tr.category, est_cost=tr.est_cost,
+                timeout_ticks=self._timeout_ticks(tr.category))
+        # drain due retries (transient bounces and timed-out requests) —
+        # after fault transitions so they route against this tick's masks
+        for rid in [r for r, (due, _, _) in self._retry_queue.items()
+                    if self.ticks >= due]:
+            _, sreq, attempt = self._retry_queue.pop(rid)
+            self.tracer.event(rid, "retry", self.ticks, attempt=attempt)
+            self._route_dispatch(sreq, attempt=attempt)
         # phase A — fleet data plane: one stacked decode dispatch per cohort.
-        # Members mid-admission (queued work at chunk > 1), empty, or on a
-        # crashed node are masked out and fall back to the per-engine path in
-        # phase B; everyone else advances device-side here, and the host
-        # bookkeeping for their chunks runs in phase B in global pair order,
-        # so monitor/hedge accounting is ordered exactly as per-engine mode.
+        # Members mid-admission (queued work at chunk > 1), empty, on a
+        # crashed node, or on a straggler without slow-credit this tick are
+        # masked out and fall back to the per-engine path in phase B;
+        # everyone else advances device-side here, and the host bookkeeping
+        # for their chunks runs in phase B in global pair order, so
+        # monitor/hedge accounting is ordered exactly as per-engine mode.
+        # Liveness (_down_nodes), not monitor.healthy_mask(), gates engine
+        # progress: a breaker-open or telemetry-dark node is hidden from
+        # ROUTING but its engines keep executing — only a crash stops them.
         chunk_work: Dict[int, object] = {}
         for ci, cohort in enumerate(self._cohorts):
             pairs = self._cohort_pairs[ci]
             eligible = [m for m, p in enumerate(pairs)
-                        if healthy[int(pair_node[p])]]
+                        if int(pair_node[p]) not in self._down_nodes
+                        and self._advance[int(pair_node[p])]]
             if not eligible:
                 continue
             res = cohort.dispatch(chunk, eligible)
@@ -417,13 +662,24 @@ class ClusterServer:
         advanced: Dict[int, int] = {}
         for pair, eng in self.engines.items():
             node = int(pair_node[pair])
-            if not healthy[node]:
+            if node in self._down_nodes:
                 continue  # crashed node makes no progress
+            if not self._advance[node]:
+                continue  # straggler: no slow-credit, no iteration this tick
             steps_before = eng._steps
-            if pair in chunk_work:
-                retired = eng._commit_chunk(chunk_work[pair])
-            else:
-                retired = eng.step_n(chunk) if chunk > 1 else eng.step()
+            try:
+                if pair in chunk_work:
+                    retired = eng._commit_chunk(chunk_work[pair])
+                else:
+                    retired = eng.step_n(chunk) if chunk > 1 else eng.step()
+            except Exception:
+                # exception safety: an error mid-commit must not leak export
+                # pins or cohort write-backs. Treat it as a node crash —
+                # fail_node cancels this node's flights, re-routes them, and
+                # flushes its pools back to the refcount baseline; later
+                # pairs on the node are skipped via _down_nodes above.
+                self.fail_node(node)
+                continue
             advanced[pair] = eng._steps - steps_before
             for rid in retired:
                 if rid in self.inflight:
@@ -467,10 +723,33 @@ class ClusterServer:
                         self.tracer.event(rid, "cancel", self.ticks,
                                           node=int(pair_node[loser]))
                     self.tracer.end(rid, self.ticks, "completed")
-        # straggler hedging: age each request by its own engine's progress
-        # (min 1 keeps the chunk=1 semantics for idle/crashed engines)
+        # straggler hedging + deadline timeouts: age each request by its own
+        # engine's progress (min 1 keeps the chunk=1 semantics for idle,
+        # crashed, or credit-starved engines — wall-tick aging is exactly
+        # what lets hedges and timeouts fire against a straggler)
+        rcfg = self.resilience
         for rid, fl in list(self.inflight.items()):
             fl.iters += max(advanced.get(fl.pair, 0), 1)
+            if (rcfg is not None and fl.iters > fl.timeout_ticks
+                    and fl.attempt < rcfg.max_retries
+                    and self._retry_budget_ok()):
+                # deadline blown: cancel every copy (hedge included), close
+                # their dispatch accounting, and re-queue with backoff. When
+                # retries or the global budget are exhausted the request
+                # instead keeps running — degraded service beats a drop.
+                self._timeouts += 1
+                self.tracer.event(rid, "timeout", self.ticks,
+                                  node=int(pair_node[fl.pair]))
+                copies = [fl.pair] + ([fl.hedge_pair]
+                                      if fl.hedge_pair is not None else [])
+                for p in copies:
+                    self.engines[p].cancel(rid)
+                    self.monitor.on_cancel(int(pair_node[p]))
+                    self.tracer.event(rid, "cancel", self.ticks,
+                                      node=int(pair_node[p]))
+                del self.inflight[rid]
+                self._schedule_retry(fl.sreq, fl.attempt)
+                continue
             if fl.iters > self.hedge_after and fl.hedge_pair is None:
                 backup = self.router.backup_pair(fl.pair)
                 if backup is not None:
@@ -483,7 +762,7 @@ class ClusterServer:
 
     def run(self, max_ticks: int = 2000, chunk: int = 1) -> Dict[int, dict]:
         t = 0
-        while self.inflight or self.transfers:
+        while self.inflight or self.transfers or self._retry_queue:
             self.step(chunk=chunk)
             t += 1
             if t > max_ticks:
@@ -529,6 +808,12 @@ class ClusterServer:
                    for c, pairs in zip(self._cohorts, self._cohort_pairs)]
         return {"completed": len(self.done), "hedges": self._hedges,
                 "reroutes": self._reroutes, "handoffs": self._handoffs,
+                "sheds": self._sheds, "retries": self._retries_spent,
+                "timeouts": self._timeouts,
+                "transient_faults": self._transients,
+                "breakers": self.monitor.breaker_states(),
+                "breaker_opens": [int(x)
+                                  for x in self.monitor.breaker_opens],
                 "transfers_inflight": len(self.transfers),
                 "cancelled": sum(s.total_cancelled
                                  for s in self.monitor.stats.values()),

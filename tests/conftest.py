@@ -70,3 +70,51 @@ def make_trace():
 def rng():
     """Deterministic per-test RNG."""
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault-schedule presets (shared by the chaos/fault tests)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def crash_storm_schedule(n_nodes=4, seed=0, horizon=60.0, spare=1):
+    """Seeded repeated-crash preset (node 0..spare-1 never crash)."""
+    from repro.faults import FaultSchedule
+    return FaultSchedule.crash_storm(n_nodes, seed=seed, horizon=horizon,
+                                     spare=spare)
+
+
+@functools.lru_cache(maxsize=None)
+def link_flap_schedule(seed=0, horizon=60.0, factor=20.0):
+    """Seeded KV-link degradation preset."""
+    from repro.faults import FaultSchedule
+    return FaultSchedule.link_flap(seed=seed, horizon=horizon, factor=factor)
+
+
+@functools.lru_cache(maxsize=None)
+def straggler_schedule(n_nodes=4, seed=0, horizon=60.0, factor=4.0):
+    """Seeded straggler-slowdown preset."""
+    from repro.faults import FaultSchedule
+    return FaultSchedule.straggler_storm(n_nodes, seed=seed, horizon=horizon,
+                                         factor=factor)
+
+
+@functools.lru_cache(maxsize=None)
+def targeted_crash_schedule(node, start=1.0, end=10.0 ** 9):
+    """Deterministic single-node crash window (endpoint-death scenarios)."""
+    from repro.faults import CrashWindow, FaultSchedule
+    return FaultSchedule(crashes=(CrashWindow(node, start, end),))
+
+
+@pytest.fixture
+def fault_schedule():
+    """Factory fixture over the shared presets: ``fault_schedule("crash")``,
+    ``("flap")``, ``("straggler")`` — deterministic per (kind, seed)."""
+    def make(kind="crash", **kw):
+        if kind == "crash":
+            return crash_storm_schedule(**kw)
+        if kind == "flap":
+            return link_flap_schedule(**kw)
+        if kind == "straggler":
+            return straggler_schedule(**kw)
+        raise ValueError(f"unknown fault preset {kind!r}")
+    return make

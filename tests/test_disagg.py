@@ -48,9 +48,9 @@ def disagg_parts(tiny_model):
     return cluster, builders, reqs
 
 
-def _server(cluster, builders):
+def _server(cluster, builders, faults=None):
     return ClusterServer(cluster, builders, PAPER_DEFAULTS, _ecfg(),
-                         router_kwargs={"mode": "disagg"})
+                         router_kwargs={"mode": "disagg"}, faults=faults)
 
 
 def _split_route(srv):
@@ -135,17 +135,23 @@ def test_disagg_server_serves_all_with_handoffs(disagg_parts):
 def test_prefill_node_death_before_delivery(disagg_parts):
     """Kill the prefill node after prefill-complete but pre-delivery: the
     transfer aborts, the request re-dispatches elsewhere to completion, and
-    the dead node's pool drains to empty (its export pins died with it)."""
+    the dead node's pool drains to empty (its export pins died with it).
+    The crash arrives via a deterministic ``FaultSchedule`` window replayed
+    by the server's per-tick fault hook (tick 1 — before the delivery loop
+    can run), not a manual ``fail_node`` call."""
+    from conftest import targeted_crash_schedule
+
     cluster, builders, reqs = disagg_parts
-    srv = _server(cluster, builders)
-    p, q = _split_route(srv)
-    arr = srv.router._np_arrays
+    probe = _server(cluster, builders)
+    p, q = _split_route(probe)
+    arr = probe.router._np_arrays
     node_p = int(arr.pair_node[p])
+    srv = _server(cluster, builders,
+                  faults=targeted_crash_schedule(node_p))
     assert srv._start_handoff(
         ServeRequest(request_id=0, req=reqs[0], max_new_tokens=3), p, q)
     assert srv.stats()["transfers_inflight"] == 1
 
-    srv.fail_node(node_p)
     done = srv.run()
     assert 0 in done and len(done[0]["tokens"]) == 3
     assert srv.stats()["reroutes"] >= 1
@@ -160,17 +166,22 @@ def test_prefill_node_death_before_delivery(disagg_parts):
 def test_decode_node_death_mid_transfer(disagg_parts):
     """Kill the decode node while the KV payload is in flight: the live
     source must drop its export pins (refcounts back to baseline), and the
-    request re-dispatches to completion with nothing leaked."""
+    request re-dispatches to completion with nothing leaked. The crash is
+    schedule-driven (``FaultSchedule`` crash window at tick 1, mid-flight)
+    rather than a manual ``fail_node`` call."""
+    from conftest import targeted_crash_schedule
+
     cluster, builders, reqs = disagg_parts
-    srv = _server(cluster, builders)
-    p, q = _split_route(srv)
-    arr = srv.router._np_arrays
+    probe = _server(cluster, builders)
+    p, q = _split_route(probe)
+    arr = probe.router._np_arrays
     node_q = int(arr.pair_node[q])
+    srv = _server(cluster, builders,
+                  faults=targeted_crash_schedule(node_q))
     assert srv._start_handoff(
         ServeRequest(request_id=0, req=reqs[0], max_new_tokens=3), p, q)
     assert _active_blocks(srv.engines[p]) > 0  # export pins held
 
-    srv.fail_node(node_q)
     done = srv.run()
     assert not srv.transfers
     assert 0 in done and len(done[0]["tokens"]) == 3

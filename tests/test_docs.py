@@ -118,3 +118,28 @@ def test_readme_and_bench_readme_name_obs():
     bench = (REPO / "benchmarks" / "README.md").read_text()
     assert "obs_overhead.py" in bench and "BENCH_obs.json" in bench
     assert "Chrome-trace" in bench
+
+
+def test_architecture_doc_has_resilience_section():
+    """The resilience section must exist and cover the fault vocabulary,
+    three-layer equivalence, breaker state machine, retry-budget semantics,
+    slow-credit straggling, and the shed policy."""
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "Resilience & fault injection" in doc
+    for needle in ("FaultSchedule", "CrashWindow", "Straggler", "LinkFlap",
+                   "HeartbeatLoss", "TransientErrors", "crash_storm",
+                   "EvalConfig.faulty", "half-open", "breaker_threshold",
+                   "Retry-budget semantics", "backoff_jitter_u",
+                   "deadline-aware", "slow-credit", "Shed policy",
+                   "shed_threshold", "brownout", "ResilienceConfig",
+                   "reset_breaker", "chaos.py"):
+        assert needle in doc, f"resilience docs miss: {needle}"
+
+
+def test_readme_and_bench_readme_name_chaos():
+    readme = (REPO / "README.md").read_text()
+    assert "src/repro/faults/" in readme and "chaos.py" in readme
+    assert "circuit breaker" in readme and "shed" in readme
+    bench = (REPO / "benchmarks" / "README.md").read_text()
+    assert "chaos.py" in bench and "BENCH_chaos.json" in bench
+    assert "crash-storm" in bench and "SLO attainment" in bench
