@@ -1,0 +1,200 @@
+"""Online-learned estimators vs static priors under drift + stragglers.
+
+The static pair tables the router plans with (``build_tables``) know nothing
+about *runtime* conditions: a straggling node serves every token 3-4x slower
+than its table entry, and no amount of genome tuning can see that through
+stale estimates. This benchmark measures what closing that loop is worth:
+per-(node, category) online estimators (``src/repro/learn/``) observe
+realized TTFT/TPOT at completion, learn multiplicative residuals, and
+override the estimate rows every policy reads.
+
+Scenario: the ``mix_shift``-style drift from ``online_drift.py`` (calm
+code-heavy window 0, then math-heavy longer-prompt windows at higher rate)
+overlaid with *unannounced* stragglers — the cloud node at 3x and the first
+edge node at 4x — that no static table reflects. Four windows are served
+back-to-back through the DES oracle with the learner state carried across
+windows (``SimResult.learn_state`` -> ``run(learn_state=)``), for each of:
+
+* ``slo``   x {static, learned}: an existing deadline-feasibility policy,
+  EWMA residual learner;
+* ``bandit`` x {static, learned}: the LinUCB-style explore-exploit policy,
+  Bayesian linear-regression learner.
+
+Reported per (policy, variant, window): mean quality, mean cost, mean RT,
+SLO attainment, and the **estimator error** — MAE between the prefill/TPOT
+estimates each decision acted on and the realized values (static variants
+have no estimate rows recorded, reported as ``nan``). The headline check:
+per policy, the learned variant must beat its static-prior twin on the
+post-drift min-max composite over (quality up, cost down, rt down,
+attainment up), and the learned MAE must *decrease* over the run (the
+estimator is actually converging, not just perturbing decisions).
+
+Writes results/online_learning.csv and BENCH_learning.json (the per-window
+MAE trajectories + composite verdicts CI uploads as an artifact).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.spec import paper_testbed
+from repro.core.policies import get_policy
+from repro.faults import FaultSchedule, Straggler
+from repro.learn import LearnConfig
+from repro.workload.arrivals import PhaseSpec, build_open_loop_trace
+from repro.workload.slo import attach_slos
+
+from .common import write_bench_json, write_csv
+
+SMOKE = "--smoke" in sys.argv
+
+WINDOW_REQUESTS = 20 if SMOKE else 60
+N_WINDOWS = 3 if SMOKE else 4
+
+# (policy, learner kind): the EWMA pairs with the deadline-feasibility
+# policy (cheap, scalar residuals suffice), the BLR with the bandit (its
+# LinUCB width *is* the BLR posterior uncertainty).
+VARIANTS = (("slo", "ewma"), ("bandit", "blr"))
+
+# Calm code-heavy tuning window, then a math-heavy longer-prompt drift at a
+# moderate rate — deliberately *below* hard saturation so routing (not pure
+# queueing) decides outcomes and corrected estimates can matter.
+PHASES = [
+    PhaseSpec(rate=1.5, duration=1e9, mix=(0.70, 0.10, 0.10, 0.10)),
+] + [
+    PhaseSpec(rate=2.5, duration=1e9, mix=(0.10, 0.70, 0.10, 0.10),
+              length_scale=1.5),
+] * (N_WINDOWS - 1)
+
+# Unannounced stragglers on *both* tiers: the cloud node (the quality-seeking
+# bandit's preferred target) and the first edge node (the cheapest
+# deadline-feasible pair the slo policy leans on). Static tables see neither.
+STRAGGLERS = FaultSchedule(stragglers=(Straggler(0, 0.0, 1e9, 3.0),
+                                       Straggler(1, 0.0, 1e9, 4.0)))
+
+
+def _windows(seed: int):
+    out = []
+    for k, ph in enumerate(PHASES):
+        tr = build_open_loop_trace(WINDOW_REQUESTS, (ph,), seed=seed * 100 + k)
+        attach_slos(tr, tightness=1.0, seed=seed * 100 + k)
+        out.append(tr)
+    return out
+
+
+def run_variant(policy: str, learned: bool, kind: str, seed: int = 0):
+    """Serve all windows back-to-back, carrying learner state across them.
+    Returns per-window (quality, cost, rt, attainment, mae_ttft, mae_tpot)."""
+    cluster = paper_testbed()
+    genome = get_policy(policy).genome_spec.defaults
+    state = None
+    rows = []
+    for tr in _windows(seed):
+        sim = ClusterSimulator(tr, cluster, faults=STRAGGLERS,
+                               learned=learned, learner=LearnConfig(kind=kind))
+        res = sim.run(policy=policy, genome=genome, learn_state=state)
+        if learned:
+            state = res.learn_state
+        if res.est_prefill is None:
+            mae_p = mae_t = float("nan")
+        else:
+            mae_p = float(np.mean(np.abs(np.asarray(res.est_prefill)
+                                         - np.asarray(res.real_prefill))))
+            mae_t = float(np.mean(np.abs(np.asarray(res.est_tpot)
+                                         - np.asarray(res.real_tpot))))
+        rows.append((float(res.q.mean()), float(res.cost.mean()),
+                     float(res.rt.mean()),
+                     res.slo_attainment(tr.ttft_deadline, tr.tpot_deadline),
+                     mae_p, mae_t))
+    return rows
+
+
+def _post_drift_mean(rows):
+    """Mean (quality, cost, rt, attainment) over the post-drift windows."""
+    return np.mean(np.asarray(rows, np.float64)[1:, :4], axis=0)
+
+
+def _composite(static_m, learned_m):
+    """Min-max composite over (quality up, cost down, rt down, attain up)
+    between the two variants of one policy — §V-D style, smaller field."""
+    arr = np.stack([static_m, learned_m])
+
+    def norm(col, larger_better):
+        rng = col.max() - col.min()
+        if rng <= 1e-12:
+            return np.full_like(col, 0.5)
+        n = (col - col.min()) / rng
+        return n if larger_better else 1.0 - n
+
+    comp = (norm(arr[:, 0], True) + norm(arr[:, 1], False)
+            + norm(arr[:, 2], False) + norm(arr[:, 3], True)) / 4.0
+    return float(comp[0]), float(comp[1])
+
+
+def run(seed: int = 0):
+    csv_rows = []
+    verdicts = {}
+    for policy, kind in VARIANTS:
+        per = {}
+        for learned in (False, True):
+            rows = run_variant(policy, learned, kind, seed=seed)
+            per[learned] = rows
+            variant = "learned" if learned else "static"
+            for k, r in enumerate(rows):
+                csv_rows.append([policy, variant, kind if learned else "-", k,
+                                 f"{r[0]:.4f}", f"{r[1]:.4e}", f"{r[2]:.4f}",
+                                 f"{r[3]:.4f}", f"{r[4]:.4f}", f"{r[5]:.4f}"])
+        c_static, c_learned = _composite(_post_drift_mean(per[False]),
+                                         _post_drift_mean(per[True]))
+        maes_p = [r[4] for r in per[True]]
+        maes_t = [r[5] for r in per[True]]
+        verdicts[policy] = {
+            "kind": kind,
+            "composite_static": c_static,
+            "composite_learned": c_learned,
+            "learned_beats_static": c_learned > c_static,
+            "attainment_static": float(_post_drift_mean(per[False])[3]),
+            "attainment_learned": float(_post_drift_mean(per[True])[3]),
+            "mae_ttft_by_window": maes_p,
+            "mae_tpot_by_window": maes_t,
+            "mae_ttft_decreasing": maes_p[-1] < maes_p[0],
+        }
+    suffix = "_smoke" if SMOKE else ""
+    write_csv(f"online_learning{suffix}.csv",
+              ["policy", "variant", "learner", "window", "avg_quality",
+               "avg_cost", "avg_rt_s", "slo_attainment", "mae_ttft",
+               "mae_tpot"], csv_rows)
+    write_bench_json(f"learning{suffix}", {
+        "window_requests": WINDOW_REQUESTS, "n_windows": N_WINDOWS,
+        "stragglers": [[s.node, s.factor] for s in STRAGGLERS.stragglers],
+        "policies": verdicts,
+    })
+    return csv_rows, verdicts
+
+
+def main():
+    _, verdicts = run()
+    for policy, v in verdicts.items():
+        print(f"online_learning.{policy}.composite,,"
+              f"static={v['composite_static']:.4f} "
+              f"learned={v['composite_learned']:.4f} "
+              f"attain={v['attainment_static']:.3f}->"
+              f"{v['attainment_learned']:.3f}")
+        print(f"online_learning.{policy}.mae_ttft,,"
+              + " ".join(f"{m:.4f}" for m in v["mae_ttft_by_window"]))
+    # the estimator must actually converge (error falls), even on tiny shapes
+    for policy, v in verdicts.items():
+        assert v["mae_ttft_decreasing"], \
+            f"{policy} estimator error did not decrease over the run"
+    if SMOKE:
+        return   # tiny windows: the composite verdicts are not stable
+    assert verdicts["bandit"]["learned_beats_static"], \
+        "bandit with learned estimates failed to beat its static prior"
+    assert verdicts["slo"]["learned_beats_static"], \
+        "slo with learned estimates failed to beat its static prior"
+
+
+if __name__ == "__main__":
+    main()

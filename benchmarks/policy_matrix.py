@@ -10,7 +10,11 @@ multi-turn session trace with the prefix-cache model enabled — so a policy
 module dropped into ``core/policies/`` shows up here with **zero edits**.
 
 Per policy the matrix reports quality, cost, response time, TTFT, SLO
-attainment, cache hit fraction, and the wall-clock NSGA-II fit time.
+attainment, cache hit fraction, the wall-clock NSGA-II fit time, and a
+**learned** column pair: the same genome replayed under an unannounced
+cloud-node straggler with static priors vs the online estimators
+(``repro.learn``, ``EvalConfig(learned=True)``) correcting the estimate
+rows.
 Writes ``results/policy_matrix.csv`` + ``BENCH_policy_matrix.json``
 (``*_smoke`` variants under ``--smoke`` so CI cannot clobber committed
 full-sweep results).
@@ -27,6 +31,8 @@ from repro.cluster.spec import paper_testbed
 from repro.core.fitness import EvalConfig, TraceEvaluator
 from repro.core.nsga2 import NSGA2, NSGA2Config
 from repro.core.policies import get_policy, list_policies
+from repro.faults import FaultSchedule, Straggler
+from repro.learn import LearnConfig
 from repro.obs.metrics import Histogram
 from repro.workload.sessions import SessionConfig, build_session_trace
 from repro.workload.slo import attach_slos
@@ -66,6 +72,21 @@ def run(seed: int = 0):
                               EvalConfig(mode="open", prefix_cache=True,
                                          disaggregated=True),
                               bucket="pow2")
+    # the `learned` column: the same genome replayed under an unannounced
+    # straggler (cloud node 3x slower than its static table), once on static
+    # priors and once with the online estimators (repro.learn) correcting
+    # the estimate rows in the scan carry — so every registered policy
+    # reports what closing the observation loop is worth, with zero edits
+    sched = FaultSchedule(stragglers=(Straggler(0, 0.0, 1e9, 3.0),))
+    ev_strag = {}
+    for disagg in (False, True):
+        for learned in (False, True):
+            ev_strag[(disagg, learned)] = TraceEvaluator(
+                tr, cluster,
+                EvalConfig(mode="open", prefix_cache=True, faulty=True,
+                           disaggregated=disagg, learned=learned,
+                           learner=LearnConfig()),
+                bucket="pow2", faults=sched)
     pop = 8 if SMOKE else POP
     gens = 4 if SMOKE else GENS
 
@@ -101,6 +122,11 @@ def run(seed: int = 0):
             h_rt.observe(np.asarray(res.rt, np.float64))
             h_tt.observe(np.asarray(res.ttft, np.float64))
             rt_p, tt_p = h_rt.percentiles(), h_tt.percentiles()
+            att_strag = {}
+            for learned in (False, True):
+                ev_f = ev_strag[(pol.decides == "route", learned)]
+                att_strag[learned] = ev_f.summarize(
+                    ev_f.run_policy(name, g))["slo_attainment"]
             rows.append([name, variant, f"{s['avg_quality']:.4f}",
                          f"{s['avg_cost']:.4e}",
                          f"{s['avg_response_time']:.4f}",
@@ -108,7 +134,9 @@ def run(seed: int = 0):
                          f"{rt_p['p99']:.4f}",
                          f"{s['avg_ttft']:.4f}", f"{tt_p['p99']:.4f}",
                          f"{s['slo_attainment']:.4f}",
-                         f"{s['cache_hit_frac']:.4f}", f"{fit_s:.3f}"])
+                         f"{s['cache_hit_frac']:.4f}",
+                         f"{att_strag[False]:.4f}", f"{att_strag[True]:.4f}",
+                         f"{fit_s:.3f}"])
             bench[f"{name}.{variant}"] = {
                 "policy": name, "variant": variant,
                 "avg_quality": s["avg_quality"], "avg_cost": s["avg_cost"],
@@ -119,6 +147,8 @@ def run(seed: int = 0):
                 "ttft_p99_s": float(tt_p["p99"]),
                 "slo_attainment": s["slo_attainment"],
                 "cache_hit_frac": s["cache_hit_frac"],
+                "attain_straggler_static": att_strag[False],
+                "attain_straggler_learned": att_strag[True],
                 "nsga2_fit_s": fit_s,
             }
 
@@ -127,6 +157,7 @@ def run(seed: int = 0):
               ["policy", "variant", "avg_quality", "avg_cost", "avg_rt_s",
                "rt_p50_s", "rt_p95_s", "rt_p99_s", "avg_ttft_s",
                "ttft_p99_s", "slo_attainment", "cache_hit_frac",
+               "attain_straggler_static", "attain_straggler_learned",
                "nsga2_fit_s"], rows)
     write_bench_json(f"policy_matrix{suffix}", {
         "n_requests": tr.n_requests, "pop_size": pop, "generations": gens,
@@ -142,7 +173,9 @@ def main():
               f"quality={r['avg_quality']:.4f} cost={r['avg_cost']:.4e} "
               f"rt={r['avg_rt_s']:.4f} rt_p99={r['rt_p99_s']:.4f} "
               f"attain={r['slo_attainment']:.4f} "
-              f"hit={r['cache_hit_frac']:.4f}")
+              f"hit={r['cache_hit_frac']:.4f} "
+              f"strag={r['attain_straggler_static']:.4f}->"
+              f"{r['attain_straggler_learned']:.4f}")
     # the registry contract: every registered policy produced a tuned row
     missing = [p for p in list_policies()
                if f"{p}.tuned" not in bench]

@@ -12,14 +12,15 @@ import traceback
 def main() -> None:
     from . import (chaos, disagg, fig2_quality, fig3_tradeoff,
                    fig4_concurrency, fleet_scale, hotpath, nsga2_perf,
-                   obs_overhead, online_drift, policy_matrix, prefix_reuse,
-                   roofline, slo_attainment, table2_routing)
+                   obs_overhead, online_drift, online_learning, policy_matrix,
+                   prefix_reuse, roofline, slo_attainment, table2_routing)
     modules = [("table2_routing", table2_routing),
                ("fig2_quality", fig2_quality),
                ("fig3_tradeoff", fig3_tradeoff),
                ("fig4_concurrency", fig4_concurrency),
                ("slo_attainment", slo_attainment),
                ("online_drift", online_drift),
+               ("online_learning", online_learning),
                ("prefix_reuse", prefix_reuse),
                ("policy_matrix", policy_matrix),
                ("disagg", disagg),

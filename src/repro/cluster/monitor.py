@@ -22,12 +22,11 @@ stale until a full ``heartbeat_timeout`` has elapsed since construction.
 from __future__ import annotations
 
 import dataclasses
-import time
-import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.learn import OnlineEstimator
 from repro.obs.metrics import MetricsRegistry
 
 
@@ -77,7 +76,8 @@ class ClusterMonitor:
                  metrics: Optional[MetricsRegistry] = None,
                  breaker_threshold: Optional[float] = None,
                  breaker_alpha: float = 0.3, breaker_min_obs: int = 4,
-                 breaker_cooldown: float = 20.0):
+                 breaker_cooldown: float = 20.0,
+                 estimator: Optional[OnlineEstimator] = None):
         self.stats: Dict[int, NodeStats] = {
             j: NodeStats(last_heartbeat=now) for j in range(n_nodes)}
         self.heartbeat_timeout = heartbeat_timeout
@@ -108,6 +108,11 @@ class ClusterMonitor:
             "fleet_slots_retired", n_nodes).values
         self.breaker_opens = self.metrics.counter(
             "breaker_open_total", n_nodes).values
+        # optional online-learned estimator (repro.learn): the live third
+        # leg of the learned-estimator loop — the router reads its residual
+        # predictions on the hot path, completion observations feed it via
+        # :meth:`feed_estimator`
+        self.estimator = estimator
 
     # -- data plane callbacks -------------------------------------------------
     def on_dispatch(self, node: int) -> None:
@@ -167,23 +172,36 @@ class ClusterMonitor:
         return {"emitted": int(self.fleet_emitted.sum()),
                 "retired": int(self.fleet_retired.sum())}
 
-    def heartbeat(self, node: int, now: Optional[float] = None) -> None:
+    def heartbeat(self, node: int, now: float) -> None:
         """Mark ``node`` alive at ``now`` (the caller's clock).
 
-        ``now`` is required: the old silent ``time.monotonic()`` fallback
-        mixed wall clock into simulated-tick runs, poisoning ``sweep``
-        expiry. The fallback survives as a deprecation shim only.
+        ``now`` is required: the pre-clock-discipline silent
+        ``time.monotonic()`` fallback mixed wall clock into simulated-tick
+        runs, poisoning ``sweep`` expiry. It survived one release as a
+        DeprecationWarning shim and has been removed — wall-clock callers
+        pass ``heartbeat(node, now=time.monotonic())`` explicitly.
         """
-        if now is None:
-            warnings.warn(
-                "ClusterMonitor.heartbeat() without now= is deprecated; "
-                "pass the caller's clock explicitly (wall-clock callers: "
-                "heartbeat(node, now=time.monotonic()))",
-                DeprecationWarning, stacklevel=2)
-            now = time.monotonic()
         s = self.stats[node]
         s.last_heartbeat = now
         s.healthy = True
+
+    def feed_estimator(self, category: int, node_p: int, node_q: int,
+                       prompt_tokens: float, complexity: float,
+                       y_prefill: float, y_tpot: float,
+                       y_quality: float = 0.0) -> None:
+        """Forward one completed request's residual targets into the
+        attached :class:`~repro.learn.OnlineEstimator` (no-op without one).
+
+        ``y_*`` are residual targets computed by the caller in its own clock
+        domain — typically ``OnlineEstimator.ratio(expected, realized)`` for
+        the latency signals; decision-time queue depths come from this
+        monitor's outstanding counts."""
+        if self.estimator is None:
+            return
+        self.estimator.observe(
+            category, node_p, node_q, prompt_tokens, complexity,
+            np.asarray(self.queue_lengths(), np.int64),
+            self.estimator.node_conc, y_prefill, y_tpot, y_quality)
 
     def mark_down(self, node: int) -> None:
         self.stats[node].healthy = False

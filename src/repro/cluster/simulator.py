@@ -38,6 +38,8 @@ import numpy as np
 from ..core.policies import PolicyInputs, get_policy
 from ..faults import (FaultSchedule, link_slowdown_np, node_available_np,
                       node_slowdown_np, transient_delay_np)
+from ..learn import LearnConfig
+from ..learn import estimators as learn_est
 from ..obs.trace import NOOP_TRACER
 from ..workload.trace import Trace
 from .spec import ClusterSpec
@@ -59,6 +61,16 @@ class SimResult:
     # KV-transfer seconds between prefill and decode (disaggregated runs;
     # exactly 0 on colocated routes)
     transfer: Optional[np.ndarray] = None
+    # learned-estimator accounting (ClusterSimulator(learned=True) runs):
+    # per-request decision-time estimates vs. realized values of the phase
+    # times the estimators correct (full-prompt prefill seconds and decode
+    # s/token, both including straggler stretch), and the final estimator
+    # state — reseedable into the next window via run(learn_state=)
+    est_prefill: Optional[np.ndarray] = None
+    est_tpot: Optional[np.ndarray] = None
+    real_prefill: Optional[np.ndarray] = None
+    real_tpot: Optional[np.ndarray] = None
+    learn_state: Optional[np.ndarray] = None
 
     def summary(self) -> Dict[str, float]:
         out = {"avg_quality": float(self.q.mean()),
@@ -89,7 +101,8 @@ class ClusterSimulator:
 
     def __init__(self, trace: Trace, cluster: ClusterSpec, seed: int = 0,
                  prefix_cache: bool = False, cache_block: int = 16,
-                 disaggregated: bool = False, faults=None):
+                 disaggregated: bool = False, faults=None,
+                 learned: bool = False, learner: LearnConfig = LearnConfig()):
         if prefix_cache:
             assert trace.has_sessions and trace.has_arrivals, \
                 "prefix_cache needs an open-loop session trace"
@@ -98,11 +111,17 @@ class ClusterSimulator:
         self.prefix_cache = prefix_cache
         self.cache_block = cache_block
         self.disaggregated = disaggregated
+        # online-learned estimators (repro.learn): the DES twin of the JAX
+        # scan's EvalConfig(learned=True) — corrected PolicyInputs rows at
+        # decision time, residual updates at dispatch, float32 op-for-op
+        self.learned = learned
+        self.learner = learner
         # reuse the same static tables as the JAX path so quality/cost/
         # service-time definitions are shared; only queueing is independent
         from ..core.fitness import build_tables
         tables, arrays = build_tables(trace, cluster, seed=seed)
         self.quality = np.asarray(tables.quality)
+        self.quality_mean = np.asarray(tables.quality_mean)
         self.cost = np.asarray(tables.cost)
         self.service = np.asarray(tables.service)
         self.up = np.asarray(tables.up_time)
@@ -234,7 +253,7 @@ class ClusterSimulator:
         return pol, g, pol.init_state()
 
     def _policy_inputs(self, i: int, busy, cache, now: float,
-                       avail=None) -> PolicyInputs:
+                       avail=None, lstate=None) -> PolicyInputs:
         """The DES twin of the JAX scan's decision context: same float32
         table rows, busy-slot counts at arrival, whole-block cache hit
         fractions, and deadline contract (+inf without SLOs). ``avail``
@@ -266,6 +285,29 @@ class ClusterSimulator:
                 np.float32)).astype(np.float32)
         else:
             kv_bytes = np.zeros(len(self.pair_node), np.float32)
+        if self.learned and lstate is not None:
+            # learned-estimator correction, mirroring the scan op-for-op:
+            # residual posteriors override the prefill/tpot estimate rows
+            # and fill the quality/unc rows (neutral state -> bitwise the
+            # static rows)
+            x1, x2, x3 = learn_est.features(
+                np, np.float32(tr.prompt_tokens[i]),
+                np.float32(tr.complexity[i]), queue,
+                np.asarray(self.node_conc))
+            d_p, d_t, d_q, unc_n = learn_est.predict_np(
+                self.learner, lstate, n_nodes, int(tr.pred_category[i]),
+                x1, x2, x3)
+            prefill_row, tpot_row, quality_row, unc_row = \
+                learn_est.corrected_rows(
+                    np, np.asarray(self.prefill[i], np.float32),
+                    np.asarray(self.tpot_pair, np.float32),
+                    np.asarray(self.quality_mean[i], np.float32),
+                    d_p, d_t, d_q, unc_n, np.asarray(self.pair_node))
+        else:
+            prefill_row = self.prefill[i]
+            tpot_row = self.tpot_pair
+            quality_row = self.quality_mean[i]
+            unc_row = np.zeros(len(self.pair_node), np.float32)
         return PolicyInputs(
             index=np.int32(i), now=np.float32(now),
             complexity=np.float32(tr.complexity[i]),
@@ -276,10 +318,67 @@ class ClusterSimulator:
             tpot_deadline=np.float32(tr.tpot_deadline[i] if has_slos
                                      else np.inf),
             prompt_tokens=np.float32(tr.prompt_tokens[i]),
-            up=up_row, prefill=self.prefill[i], tpot=self.tpot_pair,
+            up=up_row, prefill=prefill_row, tpot=tpot_row,
             cost=self.cost[i], prompt_cost=self.prompt_cost[i],
             hit_frac=hit, queue_len=queue,
-            kv_bytes=kv_bytes)
+            kv_bytes=kv_bytes, quality=quality_row, unc=unc_row)
+
+    # -- learned-estimator feedback (shared by both oracles) ------------------
+    def _learn_observe(self, lstate, i: int, inp: PolicyInputs, pair_p: int,
+                       pair_q: int, node_p: int, node_q: int, slow_p: float,
+                       slow_q: float) -> np.ndarray:
+        """Feed the dispatched request's residual targets into the estimator
+        state: the scan's update mirror (prefill residual on the prefill
+        node, tpot + quality on the decode node; fault-free observations are
+        exact zeros for the latency signals)."""
+        x1, x2, x3 = learn_est.features(
+            np, inp.prompt_tokens, inp.complexity,
+            np.asarray(inp.queue_len, np.int64), np.asarray(self.node_conc))
+        y_p, y_t, y_q = learn_est.observations(
+            np, np.float32(self.prefill[i, pair_p]), np.float32(slow_p),
+            np.float32(self.tpot_pair[pair_q]), np.float32(slow_q),
+            np.float32(self.quality[i, pair_q]),
+            np.float32(self.quality_mean[i, pair_q]))
+        return learn_est.update_np(
+            self.learner, lstate, len(self.node_conc),
+            int(inp.pred_category), node_p, node_q, x1, x2, x3, y_p, y_t,
+            y_q)
+
+    def _learn_after_colo(self, lstate, i: int, inp, pair: int, node: int,
+                          slow_n: float, est_p, est_t, real_p, real_t):
+        """Record est-vs-realized phase times and update the state after a
+        colocated dispatch (realized = full static phase × straggler)."""
+        est_p[i] = float(inp.prefill[pair])
+        est_t[i] = float(inp.tpot[pair])
+        real_p[i] = float(self.prefill[i, pair]) * slow_n
+        real_t[i] = float(self.tpot_pair[pair]) * slow_n
+        return self._learn_observe(lstate, i, inp, pair, pair, node, node,
+                                   slow_n, slow_n)
+
+    def _learn_after_disagg(self, lstate, i: int, inp, row, fc, est_p,
+                            est_t, real_p, real_t):
+        """Disaggregated twin of :meth:`_learn_after_colo`: prefill leg
+        attributed to the prefill node, tpot/quality to the decode node."""
+        pp, qd = row["pp"], row["pair"]
+        lp, lq = row["lp"], row["lq"]
+        slow_p = 1.0 if fc is None else float(fc[2][lp])
+        slow_q = 1.0 if fc is None else float(fc[2][lq])
+        est_p[i] = float(inp.prefill[pp])
+        est_t[i] = float(inp.tpot[qd])
+        real_p[i] = float(self.prefill[i, pp]) * slow_p
+        real_t[i] = float(self.tpot_pair[qd]) * slow_q
+        return self._learn_observe(lstate, i, inp, pp, qd, lp, lq, slow_p,
+                                   slow_q)
+
+    def _learn_init(self, pol, learn_state):
+        """Initial estimator state for a run (None when learning is off)."""
+        if not self.learned:
+            return None
+        assert pol is not None, \
+            "learned=True needs in-loop policy= decisions (not assign=)"
+        if learn_state is not None:
+            return np.asarray(learn_state, np.float32).copy()
+        return learn_est.init_state(self.learner, len(self.node_conc))
 
     # -- observability emission (shared by both oracles, so the span and
     # audit streams are identical by construction) ----------------------------
@@ -430,7 +529,8 @@ class ClusterSimulator:
                          node_q)
             tracer.event(i, "complete", completion, node=node_q)
             tracer.end(i, completion, "completed")
-        return {"pair": qd, "hf": hf, "cost": cost_i,
+        return {"pair": qd, "pp": p, "lp": node_p, "lq": node_q,
+                "hf": hf, "cost": cost_i,
                 "wait": wait_p + wait_d,
                 "ttft": (start_p + prefill_eff) - arrival,
                 "transfer": transfer, "completion": completion,
@@ -444,7 +544,8 @@ class ClusterSimulator:
             on_failure: Optional[Callable[[int, int], int]] = None,
             arrivals: Optional[Sequence[float]] = None,
             policy: Optional[str] = None, genome=None,
-            tracer=None, audit=None, metrics=None) -> SimResult:
+            tracer=None, audit=None, metrics=None,
+            learn_state=None) -> SimResult:
         """Execute the trace under assignment ``assign``, or — with
         ``policy=``/``genome=`` — decide each request in-loop through the
         RoutingPolicy registry (the DES twin of the JAX scan's in-scan
@@ -464,6 +565,10 @@ class ClusterSimulator:
         lifecycle spans (simulated-seconds clock), per-decision audit
         records, and a vectorized post-run metrics ingest. All default to
         zero-overhead no-ops.
+
+        learn_state: optional estimator state (``ClusterSimulator(
+        learned=True)`` only) carried in from a previous window's
+        ``SimResult.learn_state`` — cold-starts neutral when omitted.
         """
         I = self.trace.n_requests
         G = concurrency
@@ -471,6 +576,9 @@ class ClusterSimulator:
         down_nodes = down_nodes or {}
         tracer = NOOP_TRACER if tracer is None else tracer
         pol, g, pstate = self._resolve_policy(policy, genome, assign)
+        lstate = self._learn_init(pol, learn_state)
+        est_p = np.zeros(I); est_t = np.zeros(I)
+        real_p = np.zeros(I); real_t = np.zeros(I)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
         if arrivals is not None:
@@ -508,7 +616,7 @@ class ClusterSimulator:
                               for n in range(n_nodes)]
                 inp = self._policy_inputs(
                     i, busy_slots, cache, t_dec,
-                    avail=None if fc is None else fc[1])
+                    avail=None if fc is None else fc[1], lstate=lstate)
                 pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
             else:
                 inp = None
@@ -546,6 +654,10 @@ class ClusterSimulator:
                 if pol is not None:
                     pstate = pol.update_py(g, pstate, inp, row["pair"],
                                            row["cost"])
+                if lstate is not None:
+                    lstate = self._learn_after_disagg(
+                        lstate, i, inp, row, fc, est_p, est_t, real_p,
+                        real_t)
                 q[i] = row["q"]; cost[i] = row["cost"]
                 rt[i] = row["completion"] - arrival
                 wait[i] = row["wait"]; ttft[i] = row["ttft"]
@@ -587,6 +699,10 @@ class ClusterSimulator:
             self._cache_admit(cache, i, node)
             if pol is not None:
                 pstate = pol.update_py(g, pstate, inp, pair, cost_i)
+            if lstate is not None:
+                lstate = self._learn_after_colo(
+                    lstate, i, inp, pair, node, slow_n, est_p, est_t,
+                    real_p, real_t)
 
             q[i] = self.quality[i, pair]
             cost[i] = cost_i
@@ -601,9 +717,12 @@ class ClusterSimulator:
             self._trace_colo(tracer, i, arrival, pair, node, wait[i],
                              prefill_i, service_i - prefill_i, completion)
 
+        extra = ({"est_prefill": est_p, "est_tpot": est_t,
+                  "real_prefill": real_p, "real_tpot": real_t,
+                  "learn_state": lstate} if lstate is not None else {})
         res = SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
-                        transfer=transfer)
+                        transfer=transfer, **extra)
         self._record_metrics(metrics, res)
         return res
 
@@ -612,8 +731,8 @@ class ClusterSimulator:
                        concurrency: int = 1,
                        arrivals: Optional[Sequence[float]] = None,
                        policy: Optional[str] = None, genome=None,
-                       tracer=None, audit=None, metrics=None
-                       ) -> SimResult:
+                       tracer=None, audit=None, metrics=None,
+                       learn_state=None) -> SimResult:
         """Same semantics via an explicit event heap (belt-and-braces oracle:
         two independent queueing implementations must agree). With
         ``arrivals`` (or a trace carrying ``arrival_time``) every request's
@@ -625,6 +744,7 @@ class ClusterSimulator:
         n_nodes = len(self.cluster.nodes)
         tracer = NOOP_TRACER if tracer is None else tracer
         pol, g, pstate = self._resolve_policy(policy, genome, assign)
+        lstate = self._learn_init(pol, learn_state)
         if arrivals is None and self.trace.has_arrivals:
             arrivals = self.trace.arrival_time
 
@@ -632,6 +752,8 @@ class ClusterSimulator:
         wait = np.zeros(I); out_assign = np.zeros(I, np.int64)
         ttft = np.zeros(I); tpot = np.zeros(I); hit = np.zeros(I)
         transfer = np.zeros(I)
+        est_p = np.zeros(I); est_t = np.zeros(I)
+        real_p = np.zeros(I); real_t = np.zeros(I)
         busy = np.zeros(n_nodes)
         cache = self._cache_state()
 
@@ -665,7 +787,7 @@ class ClusterSimulator:
                                   for n in range(n_nodes)]
                     inp = self._policy_inputs(
                         i, busy_slots, cache, t_dec,
-                        avail=None if fc is None else fc[1])
+                        avail=None if fc is None else fc[1], lstate=lstate)
                     pair = int(pol.decide_py(g, inp, self.np_arrays, pstate))
                 else:
                     inp = None
@@ -684,6 +806,10 @@ class ClusterSimulator:
                     if pol is not None:
                         pstate = pol.update_py(g, pstate, inp, row["pair"],
                                                row["cost"])
+                    if lstate is not None:
+                        lstate = self._learn_after_disagg(
+                            lstate, i, inp, row, fc, est_p, est_t, real_p,
+                            real_t)
                     q[i] = row["q"]; cost[i] = row["cost"]
                     rt[i] = row["completion"] - t
                     wait[i] = row["wait"]; ttft[i] = row["ttft"]
@@ -712,6 +838,10 @@ class ClusterSimulator:
                 self._cache_admit(cache, i, node)
                 if pol is not None:
                     pstate = pol.update_py(g, pstate, inp, pair, cost_i)
+                if lstate is not None:
+                    lstate = self._learn_after_colo(
+                        lstate, i, inp, pair, node, slow_n, est_p, est_t,
+                        real_p, real_t)
                 q[i] = self.quality[i, pair]; cost[i] = cost_i
                 rt[i] = completion - t; wait[i] = start - ready
                 ttft[i] = (start + prefill_i) - t
@@ -727,8 +857,11 @@ class ClusterSimulator:
                     heapq.heappush(heap, (t, seq, "issue", (issued, c)))
                     seq += 1; issued += 1
 
+        extra = ({"est_prefill": est_p, "est_tpot": est_t,
+                  "real_prefill": real_p, "real_tpot": real_t,
+                  "learn_state": lstate} if lstate is not None else {})
         res = SimResult(q=q, cost=cost, rt=rt, assign=out_assign, wait=wait,
                         node_busy_time=busy, ttft=ttft, tpot=tpot, hit=hit,
-                        transfer=transfer)
+                        transfer=transfer, **extra)
         self._record_metrics(metrics, res)
         return res

@@ -19,24 +19,16 @@ up automatically — modules in this package are auto-imported (sorted name
 order) on first import, so there is no central list to edit. See
 docs/architecture.md ("Policy registry & extension guide") for the
 contract details.
-
-Legacy spellings: ``make_fitness(genome="continuous"/"discrete")`` predate
-the registry and map to ``"threshold"``/``"direct"`` with a
-DeprecationWarning.
 """
 from __future__ import annotations
 
 import importlib
 import pkgutil
-import warnings
 from typing import Dict, Tuple
 
 from .base import GenomeSpec, PolicyInputs, RoutingPolicy  # noqa: F401
 
 _REGISTRY: Dict[str, RoutingPolicy] = {}
-
-# pre-registry genome-kind strings still accepted (with a warning)
-_LEGACY_ALIASES = {"continuous": "threshold", "discrete": "direct"}
 
 
 def register_policy(policy: RoutingPolicy) -> RoutingPolicy:
@@ -44,8 +36,6 @@ def register_policy(policy: RoutingPolicy) -> RoutingPolicy:
     object (module reloads); a *different* object under a taken name is an
     error — policy identity is a jit cache key and must stay unambiguous."""
     assert policy.name, "policy must set a non-empty name"
-    assert policy.name not in _LEGACY_ALIASES, \
-        f"{policy.name!r} is reserved as a legacy alias"
     prev = _REGISTRY.get(policy.name)
     if prev is not None and type(prev) is not type(policy):
         raise ValueError(f"policy name {policy.name!r} already registered "
@@ -54,27 +44,14 @@ def register_policy(policy: RoutingPolicy) -> RoutingPolicy:
     return policy
 
 
-def canonical_policy_name(name: str) -> str:
-    """Map legacy genome-kind spellings onto registry names (warning), pass
-    canonical names through untouched."""
-    if name in _LEGACY_ALIASES:
-        canon = _LEGACY_ALIASES[name]
-        warnings.warn(
-            f"policy/genome kind {name!r} is deprecated; use {canon!r} "
-            f"(see core.policies)", DeprecationWarning, stacklevel=3)
-        return canon
-    return name
-
-
 def get_policy(name: str) -> RoutingPolicy:
-    """Resolve a policy by (canonical or legacy) name.
+    """Resolve a policy by registry name.
 
     Raises ``ValueError`` naming every registered policy on unknown input —
     the single error surface for ``make_fitness``, ``RequestRouter`` and the
     DES oracles."""
-    canon = canonical_policy_name(name)
     try:
-        return _REGISTRY[canon]
+        return _REGISTRY[name]
     except KeyError:
         raise ValueError(
             f"unknown routing policy {name!r}; registered policies: "
@@ -100,5 +77,4 @@ for _info in sorted(pkgutil.iter_modules(__path__), key=lambda m: m.name):
 del _info
 
 __all__ = ["GenomeSpec", "PolicyInputs", "RoutingPolicy", "register_policy",
-           "get_policy", "list_policies", "runtime_policies",
-           "canonical_policy_name"]
+           "get_policy", "list_policies", "runtime_policies"]

@@ -1,0 +1,93 @@
+"""Contextual-bandit routing policy (LinUCB-style explore–exploit).
+
+The first registry policy built for the learned-estimator loop
+(``repro.learn``): it scores every pair by an optimistic reward estimate
+
+    score = (quality + β·unc) − w_rt·RT_est − w_cost·cost_scaled
+    RT_est = up + κ·load + prefill + H·tpot          (H = 64-token horizon)
+
+and routes to the argmax. ``quality``/``unc`` are the learned-quality
+posterior mean and its uncertainty from the ``PolicyInputs`` quality rows
+(zero-filled on static-prior runs — the policy then degrades to a greedy
+quality/latency/cost trade-off), and ``prefill``/``tpot`` are the
+(possibly learned-corrected) estimate rows, so the policy sharpens as
+observations accumulate. β is the **searchable exploration dimension**:
+β = 0 is pure exploitation, larger β routes deliberately through
+uncertain (node, category) slots to buy estimator confidence — NSGA-II
+tunes it like any other gene via ``make_fitness("bandit")``.
+
+Cold-start note: with neutral estimator state the uncertainty row is
+*constant across pairs* (EWMA: 1/√1 everywhere; BLR: identical features
+when all queues are empty), so β shifts every score equally and the first
+decision is byte-identical to a static-prior run — the cold-start
+contract tests/test_learn.py asserts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import register_policy
+from .base import GenomeSpec, PolicyInputs, RoutingPolicy
+
+BANDIT_PARAM_NAMES = ("beta", "w_rt", "w_cost", "kappa")
+
+# β exploration bonus per unit uncertainty; w_rt quality-points per second
+# of estimated response time; w_cost quality-points per scaled $; κ
+# estimated wait seconds per unit node load (the slo/affinity convention).
+BANDIT_BOUNDS_LO = np.array([0.0, 0.0, 0.0, 0.0], np.float32)
+BANDIT_BOUNDS_HI = np.array([2.0, 2.0, 2.0, 20.0], np.float32)
+BANDIT_DEFAULTS = np.array([0.5, 0.5, 0.5, 3.0], np.float32)
+
+_DECODE_HORIZON = np.float32(64.0)   # tokens of decode in the RT estimate
+_COST_SCALE = np.float32(100.0)      # per-request $ -> comparable magnitude
+
+
+def _bandit_scores(xp, genome, quality, unc, up, prefill, tpot, cost,
+                   queue_len, node, conc):
+    """Shared float32 score tree (identical op-for-op in np and jnp)."""
+    beta = genome[0]
+    w_rt = genome[1]
+    w_cost = genome[2]
+    kappa = genome[3]
+    load = queue_len.astype(xp.float32) / conc.astype(xp.float32)
+    rt_est = (up + kappa * load[node]) + (prefill + _DECODE_HORIZON * tpot)
+    return (quality + beta * unc) - (w_rt * rt_est
+                                     + w_cost * (cost * _COST_SCALE))
+
+
+class BanditPolicy(RoutingPolicy):
+    """Optimistic (UCB) quality/latency/cost router over learned estimates.
+
+    Stateless as a policy — the exploration state it exercises is the
+    *shared* learned-estimator carry (``EvalConfig(learned=True)``), which
+    also feeds every other registered policy; dead-node masking works
+    unchanged because DEAD_UP/DEAD_QUEUE sentinels drive masked pairs'
+    scores to -inf territory.
+    """
+
+    name = "bandit"
+    genome_spec = GenomeSpec(names=BANDIT_PARAM_NAMES, lo=BANDIT_BOUNDS_LO,
+                             hi=BANDIT_BOUNDS_HI, defaults=BANDIT_DEFAULTS)
+    requires = frozenset({"features", "estimates", "quality"})
+
+    def decide_jnp(self, genome, inp: PolicyInputs, arrays, state):
+        score = _bandit_scores(
+            jnp, genome, inp.quality, inp.unc, inp.up, inp.prefill,
+            inp.tpot, inp.cost, inp.queue_len, arrays.pair_node,
+            arrays.node_conc)
+        return jnp.argmax(score).astype(jnp.int32)
+
+    def decide_py(self, genome, inp: PolicyInputs, arrays, state) -> int:
+        score = _bandit_scores(
+            np, np.asarray(genome, np.float32),
+            np.asarray(inp.quality, np.float32),
+            np.asarray(inp.unc, np.float32), np.asarray(inp.up, np.float32),
+            np.asarray(inp.prefill, np.float32),
+            np.asarray(inp.tpot, np.float32),
+            np.asarray(inp.cost, np.float32), np.asarray(inp.queue_len),
+            np.asarray(arrays.pair_node), np.asarray(arrays.node_conc))
+        return int(np.argmax(score))
+
+
+register_policy(BanditPolicy())

@@ -51,8 +51,12 @@ import numpy as np
 #: estimate rows (up, prefill, tpot, cost, prompt_cost); "deadlines" = the
 #: request's (TTFT, TPOT) QoE contract; "cache" = per-pair expected
 #: cached-prefix fractions from the prefix-cache state; "transfer" = per-pair
-#: KV-transfer byte sizes for disaggregated (prefill, decode) routing.
-REQUIREMENTS = ("features", "estimates", "deadlines", "cache", "transfer")
+#: KV-transfer byte sizes for disaggregated (prefill, decode) routing;
+#: "quality" = per-pair expected response quality + estimator uncertainty
+#: (zero-filled unless the caller runs with learned estimators — see
+#: ``repro.learn``).
+REQUIREMENTS = ("features", "estimates", "deadlines", "cache", "transfer",
+                "quality")
 
 
 class PolicyInputs(NamedTuple):
@@ -87,6 +91,12 @@ class PolicyInputs(NamedTuple):
     # pair's model (bytes to move if prefill and decode run on different
     # nodes). Zero-filled for policies that don't declare "transfer".
     kv_bytes: np.ndarray = np.float32(0.0)  # (n_pairs,) float32 bytes
+    # learned-estimator rows (repro.learn): per-pair expected response
+    # quality and the estimator's per-pair uncertainty (LinUCB width /
+    # 1/sqrt(1+n)). Zero-filled for policies that don't declare "quality"
+    # or when the caller runs on static priors (learned=False).
+    quality: np.ndarray = np.float32(0.0)   # (n_pairs,) float32 in [0, 1]
+    unc: np.ndarray = np.float32(0.0)       # (n_pairs,) float32 >= 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,6 +51,8 @@ import numpy as np
 
 from ..cluster.monitor import ClusterMonitor
 from ..cluster.spec import ClusterArrays, ClusterSpec
+from ..learn import LearnConfig, OnlineEstimator
+from ..learn import estimators as learn_est
 from ..workload.classifier import classify
 from ..workload.datasets import Request
 from ..workload.features import complexity_score
@@ -75,6 +77,13 @@ class RouteDecision:
     # modelled $ of the chosen pair (0.0 when the policy never requested
     # estimate rows); the serving scheduler's "spend" metric observation
     est_cost: float = 0.0
+    # the (possibly learned-corrected) estimates the decision acted on —
+    # fed back through ``record(ttft=, tpot=)`` as the expected side of the
+    # online estimator's realized-vs-estimated residual targets. Zero when
+    # the policy never requested estimate rows.
+    est_ttft: float = 0.0
+    est_tpot: float = 0.0
+    est_quality: float = 0.0
 
 
 @dataclasses.dataclass
@@ -101,7 +110,8 @@ class RequestRouter:
                  affinity_params: Optional[Sequence[float]] = None,
                  cache_block: int = 16,
                  params: Optional[Sequence[float]] = None,
-                 audit=None):
+                 audit=None, learned: bool = False,
+                 learner: LearnConfig = LearnConfig()):
         self.policy = get_policy(mode)     # ValueError lists registry names
         if self.policy.genome_spec.per_request:
             raise ValueError(
@@ -136,6 +146,15 @@ class RequestRouter:
         # numpy view of the pair table, converted once: the per-request hot
         # path must not pay device-to-host transfers on every decision
         self._np_arrays = self.arrays.numpy()
+        # online learned estimators (repro.learn): corrections ride on the
+        # monitor so the scheduler's completion path can feed observations
+        # without holding a router reference
+        self.learned = learned
+        self.learner = learner
+        if learned and self.monitor.estimator is None:
+            self.monitor.estimator = OnlineEstimator(
+                learner, len(cluster.nodes),
+                node_conc=self._np_arrays.node_conc)
         self._pair_node = self._np_arrays.pair_node
         self._pair_is_edge = self._np_arrays.pair_is_edge
         self._n_pairs = len(self._pair_node)
@@ -224,6 +243,23 @@ class RequestRouter:
             up = np.where(dead, np.float32(1e9), est["up"])
             prefill, tpot = est["prefill"], est["tpot"]
             cost, prompt_cost = est["cost"], est["prompt_cost"]
+        # static expected-quality prior: the build_tables q_mean formula with
+        # the observable complexity score standing in for latent difficulty
+        quality_row = np.clip(
+            np.asarray(self._np_arrays.pair_base_quality,
+                       np.float32)[:, req.task_id]
+            + np.asarray(self._np_arrays.pair_diff_slope, np.float32)
+            * (np.float32(0.5) - np.float32(c_i)),
+            np.float32(0.0), np.float32(1.0)).astype(np.float32)
+        unc_row = zeros
+        if self.learned and self.monitor.estimator is not None:
+            d_p, d_t, d_q, unc_n = self.monitor.estimator.predict(
+                pred_cat, req.prompt_tokens, c_i, masked_queue,
+                self._np_arrays.node_conc)
+            prefill, tpot, quality_row, unc_row = learn_est.corrected_rows(
+                np, np.asarray(prefill, np.float32),
+                np.asarray(tpot, np.float32), quality_row, d_p, d_t, d_q,
+                unc_n, self._pair_node)
         ttft_dl = (ttft_deadline if ttft_deadline is not None
                    else float(self._slo_ttft[pred_cat]))
         tpot_dl = (tpot_deadline if tpot_deadline is not None
@@ -254,7 +290,7 @@ class RequestRouter:
             prompt_tokens=np.float32(req.prompt_tokens),
             up=up, prefill=prefill, tpot=tpot, cost=cost,
             prompt_cost=prompt_cost, hit_frac=hit, queue_len=masked_queue,
-            kv_bytes=kv_bytes)
+            kv_bytes=kv_bytes, quality=quality_row, unc=unc_row)
         decision = int(pol.decide_py(self.params, inp, self._np_arrays,
                                      self._pstate))
         raw_decision = decision
@@ -327,12 +363,19 @@ class RequestRouter:
                 cost=cost if "estimates" in pol.requires else None,
                 hit=hit if "cache" in pol.requires else None,
                 est_cost=float(cost[pair]), backup_pair=backup)
+        # the estimates this decision acted on (TTFT on the prefill leg,
+        # TPOT on the decode pair) — the "expected" side of the estimator's
+        # residual targets fed back via record()
+        pp = pair if prefill_pair is None else prefill_pair
         return RouteDecision(
             pair=int(pair), node=node,
             model=int(self._np_arrays.pair_model[pair]),
             go_edge=bool(self._pair_is_edge[pair]),
             features=(c_i, pred_cat, conf), backup_pair=backup,
-            prefill_pair=prefill_pair, est_cost=float(cost[pair]))
+            prefill_pair=prefill_pair, est_cost=float(cost[pair]),
+            est_ttft=float(up[pp] + prefill[pp]),
+            est_tpot=float(tpot[pair]),
+            est_quality=float(quality_row[pair]))
 
     def backup_pair(self, primary: int) -> Optional[int]:
         """A healthy pair on a *different* node, for hedged duplicates."""
@@ -353,11 +396,32 @@ class RequestRouter:
     def record(self, req: Request, decision: RouteDecision, quality: float,
                cost: float, rt: float, now: Optional[float] = None,
                ttft_deadline: Optional[float] = None,
-               tpot_deadline: Optional[float] = None) -> None:
+               tpot_deadline: Optional[float] = None,
+               ttft: Optional[float] = None,
+               tpot: Optional[float] = None) -> None:
         """Append one served request + realized objectives to the rolling
         history window ``maybe_reoptimize`` re-fits against. ``now`` is the
         request's arrival timestamp (enables open-loop re-fitting); the
-        deadline pair is its QoE contract if it carried one."""
+        deadline pair is its QoE contract if it carried one. Realized
+        ``ttft``/``tpot`` (caller clock units — the estimator's ratio
+        residual absorbs the scale) close the learning loop: each is turned
+        into a realized-vs-estimated residual against the decision's own
+        estimates and fed to the monitor's :class:`OnlineEstimator`."""
+        est_obj = self.monitor.estimator
+        if est_obj is not None and (ttft is not None or tpot is not None):
+            y_p = (OnlineEstimator.ratio(decision.est_ttft, ttft)
+                   if ttft is not None else 0.0)
+            y_t = (OnlineEstimator.ratio(decision.est_tpot, tpot)
+                   if tpot is not None else 0.0)
+            y_q = (float(np.float32(quality)
+                         - np.float32(decision.est_quality))
+                   if decision.est_quality > 0.0 else 0.0)
+            node_p = (decision.node if decision.prefill_pair is None
+                      else int(self._pair_node[decision.prefill_pair]))
+            self.monitor.feed_estimator(
+                int(decision.features[1]), node_p, decision.node,
+                req.prompt_tokens, float(decision.features[0]),
+                y_p, y_t, y_q)
         self._history.append(Observation(
             req=req, pair=decision.pair, features=decision.features,
             quality=quality, cost=cost, rt=rt, now=now,
@@ -455,7 +519,11 @@ class RequestRouter:
             prefix_cache=(arrivals is not None and trace.has_sessions),
             cache_block=self.cache_block,
             # route-valued policies re-fit against the disaggregated model
-            disaggregated=pol.decides == "route")
+            disaggregated=pol.decides == "route",
+            # re-fit with the same estimator loop the live router runs, so
+            # the tuned genome is optimal for corrected (not static-prior)
+            # estimate rows
+            learned=self.learned, learner=self.learner)
         # bucketed (compile-once) evaluation: windows of different lengths
         # pad to the same power-of-two bucket, so every re-fit after the
         # first reuses the compiled trace-eval + NSGA-II executables instead

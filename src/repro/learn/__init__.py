@@ -1,0 +1,27 @@
+"""Online-learned latency/quality estimators (jnp/numpy twins).
+
+Closes the loop from observed completions back into routing decisions: the
+static pair tables every policy routes on are corrected by per-(node,
+category) residual estimators updated online from realized (prefill, TPOT,
+quality) observations. One update rule, three execution layers:
+
+* inside the JAX fitness scan carry (``core.fitness``,
+  ``EvalConfig(learned=True)``),
+* inside both DES oracles (``cluster.simulator``), mirrored op-for-op in
+  float32 so the JAX/DES equivalence property extends to learned runs,
+* in the live ``ClusterMonitor`` (an :class:`OnlineEstimator` fed from the
+  serving scheduler's completion/retire path and ``RequestRouter.record``).
+
+See :mod:`repro.learn.estimators` for the residual parametrization (why
+cold-start estimates are byte-identical to the static tables) and the
+EWMA / Bayesian-linear-regression update rules.
+"""
+from .estimators import (FEAT_DIM, N_CATEGORIES, N_SIGNALS,  # noqa: F401
+                         LearnConfig, OnlineEstimator, corrected_rows,
+                         features, init_state, observations, predict_jnp,
+                         predict_np, state_size, update_jnp, update_np)
+
+__all__ = ["LearnConfig", "OnlineEstimator", "state_size", "init_state",
+           "features", "predict_np", "predict_jnp", "update_np",
+           "update_jnp", "observations", "corrected_rows", "N_SIGNALS",
+           "N_CATEGORIES", "FEAT_DIM"]

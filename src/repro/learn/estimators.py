@@ -1,0 +1,323 @@
+"""Per-(node, category) online estimators for TTFT, TPOT and quality.
+
+Residual parametrization (the cold-start contract)
+--------------------------------------------------
+The estimators never re-learn the static pair tables — they learn *residuals*
+against them, and the corrected estimate a policy sees is
+
+    prefill' = prefill_table · (1 + d_p)        (multiplicative)
+    tpot'    = tpot_table    · (1 + d_t)        (multiplicative)
+    quality' = clip(quality_mean_table + d_q, 0, 1)   (additive)
+
+with all residuals seeded at **zero**. Seeding the residuals at zero *is*
+seeding the estimators from the static pair tables: pre-observation,
+``x · (1 + 0.0)`` and ``q + 0.0`` are bitwise identity in float32, so
+cold-start routing is byte-identical to the static-prior baseline (the
+regression test in tests/test_learn.py asserts exactly this).
+
+Two estimator kinds, selected by ``LearnConfig.kind``:
+
+* ``"ewma"`` — per-(node, category, signal) scalar residual EWMA
+  ``r ← r + α (y − r)`` plus an observation count; uncertainty is
+  ``1/√(1+n)`` (unexplored slots keep a high exploration bonus).
+* ``"blr"`` — per-(node, category, signal) Bayesian linear regression of the
+  residual over request features ``x = [1, prompt/512, complexity,
+  min(queue/conc, 4)]``. The posterior is maintained via Sherman–Morrison
+  rank-1 updates of A⁻¹ (A = λI + Σ x xᵀ, b = Σ x y, weights w = A⁻¹ b);
+  uncertainty is the LinUCB width ``√(xᵀ A⁻¹ x)``.
+
+Numerical discipline: every update/prediction is written as **explicit
+fixed-association float32 expression trees** (no ``linalg``/BLAS reductions),
+shared verbatim between the numpy and jnp twins — so the same rule running
+inside the JAX scan carry and inside the DES event loops produces
+bit-identical states, and argmin/argmax tie-breaking downstream cannot
+diverge between layers. tests/test_learn.py property-checks this parity.
+
+Observation contract (analytic layers): the latency signals are *speed
+ratios* computed from shared float32 table values — ``y = (static · slow) /
+static − 1`` — so a fault-free run observes exactly 0 and the learned state
+stays neutral (learned=True ≡ learned=False without faults), while straggler
+regimes (repro.faults) are what the estimators actually capture. The quality
+signal is the realized-minus-expected delta (zero-mean classifier/sampling
+noise when the tables are stationary). The live serving path
+(:class:`OnlineEstimator`) instead observes realized-vs-estimated ratios in
+the caller's own clock domain — the multiplicative residual absorbs the
+model-seconds→scheduler-ticks scale, which is the point of an online
+calibrator; the repo's enforced 3-way equivalence is among the three
+analytic layers (JAX scan + both DES oracles).
+
+Clock/feature contract: updates happen at dispatch in request order with
+greedily-computed realized values (the same greedy-at-issue convention as
+policy scan state); features are decision-time features (queue depth at
+arrival). Disaggregated routes attribute the prefill residual to the
+prefill node and the TPOT/quality residuals to the decode node.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: signal indices within a (node, category) slot group
+N_SIGNALS = 3           # 0 = prefill ratio, 1 = tpot ratio, 2 = quality delta
+#: pred_category cardinality (workload.classifier.CATEGORIES)
+N_CATEGORIES = 3
+#: BLR feature vector [1, prompt_norm, complexity, queue_norm]
+FEAT_DIM = 4
+
+_PROMPT_NORM = np.float32(512.0)   # prompt-token feature scale
+_QUEUE_CAP = np.float32(4.0)       # queue/conc feature cap (masks DEAD_QUEUE)
+_EPS = np.float32(1e-6)
+_ONE = np.float32(1.0)
+_ZERO = np.float32(0.0)
+
+_EWMA_SLOT = 2                     # [residual, count]
+_BLR_SLOT = FEAT_DIM * FEAT_DIM + FEAT_DIM   # [A⁻¹ (16), b (4)]
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnConfig:
+    """Hashable estimator configuration (part of the ``EvalConfig`` jit key).
+
+    kind: "ewma" | "blr". alpha: EWMA step size. prior: BLR prior precision
+    λ (A⁻¹ seeded at I/λ; larger = slower to move off the static tables).
+    rel_clip: upper clip of the multiplicative residuals (lower clip is
+    -0.9 so corrected times stay positive; quality deltas clip to ±1).
+    """
+
+    kind: str = "ewma"
+    alpha: float = 0.25
+    prior: float = 25.0
+    rel_clip: float = 4.0
+
+    def __post_init__(self):
+        assert self.kind in ("ewma", "blr"), self.kind
+        assert 0.0 < self.alpha <= 1.0
+        assert self.prior > 0.0 and self.rel_clip > 0.0
+
+    @property
+    def slot(self) -> int:
+        return _EWMA_SLOT if self.kind == "ewma" else _BLR_SLOT
+
+
+def state_size(cfg: LearnConfig, n_nodes: int) -> int:
+    """Flat float32 state length (lives in the scan carry)."""
+    return n_nodes * N_CATEGORIES * N_SIGNALS * cfg.slot
+
+
+def init_state(cfg: LearnConfig, n_nodes: int) -> np.ndarray:
+    """Neutral (static-table-seeded) state: zero residuals everywhere.
+
+    EWMA slots start at [r=0, n=0]; BLR slots at [A⁻¹=I/λ, b=0] whose
+    posterior mean is the zero vector — either way the first prediction is
+    a zero residual and corrected estimates equal the static tables bitwise.
+    """
+    s = np.zeros((n_nodes, N_CATEGORIES, N_SIGNALS, cfg.slot), np.float32)
+    if cfg.kind == "blr":
+        eye = (np.eye(FEAT_DIM, dtype=np.float32)
+               / np.float32(cfg.prior)).reshape(-1)
+        s[..., :FEAT_DIM * FEAT_DIM] = eye
+    return s.reshape(-1)
+
+
+def features(xp, prompt_tokens, complexity, queue_len, node_conc):
+    """Decision-time feature triple (x1 scalar, x2 scalar, x3 per-node).
+
+    ``queue_len`` is the policy-visible (possibly fault-masked) busy-slot
+    vector; the cap at ``_QUEUE_CAP`` keeps DEAD_QUEUE sentinels from
+    poisoning the regression features. Identical float32 expression for the
+    numpy and jnp callers (``xp`` ∈ {numpy, jax.numpy}).
+    """
+    x1 = xp.float32(prompt_tokens) / _PROMPT_NORM if xp is np \
+        else prompt_tokens / _PROMPT_NORM
+    x2 = xp.float32(complexity) if xp is np else complexity
+    load = queue_len.astype(xp.float32) / node_conc.astype(xp.float32)
+    x3 = xp.minimum(load, _QUEUE_CAP)
+    return x1, x2, x3
+
+
+def _blr_matvec(A, v0, v1, v2, v3):
+    """A (…, 4, 4) · v, unrolled with fixed association (bit-stable)."""
+    u0 = (A[..., 0, 0] * v0 + A[..., 0, 1] * v1) + \
+         (A[..., 0, 2] * v2 + A[..., 0, 3] * v3)
+    u1 = (A[..., 1, 0] * v0 + A[..., 1, 1] * v1) + \
+         (A[..., 1, 2] * v2 + A[..., 1, 3] * v3)
+    u2 = (A[..., 2, 0] * v0 + A[..., 2, 1] * v1) + \
+         (A[..., 2, 2] * v2 + A[..., 2, 3] * v3)
+    u3 = (A[..., 3, 0] * v0 + A[..., 3, 1] * v1) + \
+         (A[..., 3, 2] * v2 + A[..., 3, 3] * v3)
+    return u0, u1, u2, u3
+
+
+def _dot4(a0, a1, a2, a3, b0, b1, b2, b3):
+    return (a0 * b0 + a1 * b1) + (a2 * b2 + a3 * b3)
+
+
+def _predict(xp, cfg: LearnConfig, state, n_nodes: int, cat, x1, x2, x3):
+    """(d_prefill, d_tpot, d_quality, unc), each (n_nodes,) float32."""
+    s4 = state.reshape(n_nodes, N_CATEGORIES, N_SIGNALS, cfg.slot)
+    sl = s4[:, cat]                               # (n_nodes, 3, slot)
+    if cfg.kind == "ewma":
+        d_p, d_t, d_q = sl[:, 0, 0], sl[:, 1, 0], sl[:, 2, 0]
+        unc = _ONE / xp.sqrt(_ONE + sl[:, 2, 1])
+    else:
+        ds = []
+        for sig in range(N_SIGNALS):
+            A = sl[:, sig, :FEAT_DIM * FEAT_DIM].reshape(n_nodes, FEAT_DIM,
+                                                         FEAT_DIM)
+            b = sl[:, sig, FEAT_DIM * FEAT_DIM:]
+            w0, w1, w2, w3 = _blr_matvec(A, b[:, 0], b[:, 1], b[:, 2],
+                                         b[:, 3])
+            ds.append(_dot4(w0, w1, w2, w3, _ONE, x1, x2, x3))
+        d_p, d_t, d_q = ds
+        Aq = sl[:, 2, :FEAT_DIM * FEAT_DIM].reshape(n_nodes, FEAT_DIM,
+                                                    FEAT_DIM)
+        u0, u1, u2, u3 = _blr_matvec(Aq, _ONE, x1, x2, x3)
+        unc = xp.sqrt(xp.maximum(_dot4(u0, u1, u2, u3, _ONE, x1, x2, x3),
+                                 _ZERO))
+    lo, hi = np.float32(-0.9), np.float32(cfg.rel_clip)
+    return (xp.clip(d_p, lo, hi), xp.clip(d_t, lo, hi),
+            xp.clip(d_q, -_ONE, _ONE), unc)
+
+
+def predict_np(cfg: LearnConfig, state, n_nodes: int, cat, x1, x2, x3):
+    return _predict(np, cfg, state, n_nodes, int(cat), np.float32(x1),
+                    np.float32(x2), np.asarray(x3, np.float32))
+
+
+def predict_jnp(cfg: LearnConfig, state, n_nodes: int, cat, x1, x2, x3):
+    import jax.numpy as jnp
+    return _predict(jnp, cfg, state, n_nodes, cat, x1, x2, x3)
+
+
+def _slot_update(xp, cfg: LearnConfig, slot, x1, x2, x3, y):
+    """Next value of one (node, category, signal) slot after observing y."""
+    if cfg.kind == "ewma":
+        a = np.float32(cfg.alpha)
+        r, n = slot[0], slot[1]
+        return xp.stack([r + a * (y - r), n + _ONE])
+    A = slot[:FEAT_DIM * FEAT_DIM].reshape(FEAT_DIM, FEAT_DIM)
+    b = slot[FEAT_DIM * FEAT_DIM:]
+    u0, u1, u2, u3 = _blr_matvec(A, _ONE, x1, x2, x3)
+    inv = _ONE / (_ONE + _dot4(u0, u1, u2, u3, _ONE, x1, x2, x3))
+    u = xp.stack([u0, u1, u2, u3])
+    A_new = A - (u[:, None] * u[None, :]) * inv          # Sherman–Morrison
+    b_new = b + xp.stack([_ONE * y, x1 * y, x2 * y, x3 * y])
+    return xp.concatenate([A_new.reshape(FEAT_DIM * FEAT_DIM), b_new])
+
+
+#: (signal, which node observes it): prefill on the prefill node, tpot and
+#: quality on the decode node (identical nodes on colocated routes)
+_SIGNAL_NODES = ((0, "p"), (1, "q"), (2, "q"))
+
+
+def update_np(cfg: LearnConfig, state, n_nodes: int, cat, node_p, node_q,
+              x1, x2, x3, y_p, y_t, y_q) -> np.ndarray:
+    """Numpy twin of the scan-carry update (returns a fresh state array)."""
+    s4 = np.array(state, np.float32).reshape(n_nodes, N_CATEGORIES,
+                                             N_SIGNALS, cfg.slot)
+    cat = int(cat)
+    ys = (np.float32(y_p), np.float32(y_t), np.float32(y_q))
+    x3 = np.asarray(x3, np.float32)
+    for sig, leg in _SIGNAL_NODES:
+        node = int(node_p) if leg == "p" else int(node_q)
+        s4[node, cat, sig] = _slot_update(np, cfg, s4[node, cat, sig],
+                                          np.float32(x1), np.float32(x2),
+                                          x3[node], ys[sig])
+    return s4.reshape(-1)
+
+
+def update_jnp(cfg: LearnConfig, state, n_nodes: int, cat, node_p, node_q,
+               x1, x2, x3, y_p, y_t, y_q):
+    """jnp twin of :func:`update_np` (scan-traceable, functional update)."""
+    import jax.numpy as jnp
+    s4 = state.reshape(n_nodes, N_CATEGORIES, N_SIGNALS, cfg.slot)
+    ys = (y_p, y_t, y_q)
+    for sig, leg in _SIGNAL_NODES:
+        node = node_p if leg == "p" else node_q
+        s4 = s4.at[node, cat, sig].set(
+            _slot_update(jnp, cfg, s4[node, cat, sig], x1, x2, x3[node],
+                         ys[sig]))
+    return s4.reshape(-1)
+
+
+def observations(xp, prefill_static, slow_p, tpot_static, slow_q, q_real,
+                 q_mean):
+    """(y_p, y_t, y_q) residual targets from shared float32 table values.
+
+    Latency signals are speed ratios of the *full* static phase time —
+    ``(static · slow)/static − 1`` — so the known cache discount never
+    enters and a fault-free run observes exactly zero; the quality signal
+    is realized minus expected. Same expression tree for both layers.
+    """
+    y_p = xp.where(prefill_static > _EPS,
+                   (prefill_static * slow_p)
+                   / xp.maximum(prefill_static, _EPS) - _ONE, _ZERO)
+    y_t = xp.where(tpot_static > _EPS,
+                   (tpot_static * slow_q)
+                   / xp.maximum(tpot_static, _EPS) - _ONE, _ZERO)
+    return y_p, y_t, q_real - q_mean
+
+
+def corrected_rows(xp, prefill_row, tpot_row, quality_row, d_p, d_t, d_q,
+                   unc, pair_node):
+    """Apply per-node residuals to the per-pair estimate rows.
+
+    Zero residuals reproduce the inputs bitwise (×1.0 and +0.0 are float32
+    identities) — the cold-start contract policies rely on.
+    """
+    prefill_c = prefill_row * (_ONE + d_p[pair_node])
+    tpot_c = tpot_row * (_ONE + d_t[pair_node])
+    quality_c = xp.clip(quality_row + d_q[pair_node], _ZERO, _ONE)
+    return prefill_c, tpot_c, quality_c, unc[pair_node]
+
+
+class OnlineEstimator:
+    """Live (serving/runtime) numpy estimator held by ``ClusterMonitor``.
+
+    The stateful counterpart of the functional twins above: the router
+    applies :meth:`predict` corrections on its hot path and the completion/
+    retire path feeds :meth:`observe` with realized-vs-estimated ratios in
+    the caller's own clock domain (scheduler ticks or simulated seconds —
+    the multiplicative residual absorbs the unit scale).
+    """
+
+    def __init__(self, cfg: LearnConfig = LearnConfig(), n_nodes: int = 0,
+                 node_conc=None):
+        assert n_nodes > 0, "OnlineEstimator needs the cluster's node count"
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        # per-node concurrency for the queue-load feature (ones when the
+        # caller never provides queue context)
+        self.node_conc = (np.ones(n_nodes, np.int64) if node_conc is None
+                          else np.asarray(node_conc, np.int64))
+        self.state = init_state(cfg, n_nodes)
+        self.n_obs = 0
+
+    def predict(self, cat, prompt_tokens, complexity, queue_len, node_conc):
+        """(d_prefill, d_tpot, d_quality, unc) per node for one request."""
+        x1, x2, x3 = features(np, prompt_tokens, complexity,
+                              np.asarray(queue_len, np.int64),
+                              np.asarray(node_conc))
+        return predict_np(self.cfg, self.state, self.n_nodes, cat, x1, x2,
+                          x3)
+
+    @staticmethod
+    def ratio(expected: float, realized: float) -> float:
+        """Residual target ``realized/expected − 1`` (0 when unobservable)."""
+        e = float(expected)
+        if e <= 1e-6:
+            return 0.0
+        return float(np.float32(realized) / np.float32(e) - _ONE)
+
+    def observe(self, cat, node_p, node_q, prompt_tokens, complexity,
+                queue_len, node_conc, y_prefill, y_tpot,
+                y_quality=0.0) -> None:
+        """Feed one completed request's residual targets (completion path)."""
+        x1, x2, x3 = features(np, prompt_tokens, complexity,
+                              np.asarray(queue_len, np.int64),
+                              np.asarray(node_conc))
+        self.state = update_np(self.cfg, self.state, self.n_nodes, cat,
+                               node_p, node_q, x1, x2, x3, y_prefill, y_tpot,
+                               y_quality)
+        self.n_obs += 1

@@ -51,6 +51,7 @@ from ..core.router import RequestRouter
 from ..faults import (FaultSchedule, backoff_jitter_u, heartbeat_lost,
                       link_slowdown_np, node_available_np, node_slowdown_np,
                       transient_hit_np)
+from ..learn import OnlineEstimator
 from ..models import lm
 from ..obs import Obs
 from ..workload.datasets import Request
@@ -113,6 +114,14 @@ class _Flight:
     est_cost: float = 0.0  # modelled $ of the routed pair (spend metric)
     attempt: int = 0       # 0 = first dispatch; bumps on each timeout retry
     timeout_ticks: float = float("inf")   # deadline-aware per-request timeout
+    # learned-estimator feedback: the estimates the routing decision acted
+    # on (0 = policy never requested estimate rows -> nothing to learn) and
+    # the decision-time features; the prefill residual attributes to
+    # ``prefill_node`` on disaggregated routes (-1 = colocated)
+    est_ttft: float = 0.0
+    est_tpot: float = 0.0
+    complexity: float = 0.0
+    prefill_node: int = -1
 
 
 @dataclasses.dataclass
@@ -135,6 +144,10 @@ class _Transfer:
     eta: int
     category: int = -1         # classifier category (metrics label)
     est_cost: float = 0.0      # modelled $ of the decode pair (spend metric)
+    # learned-estimator feedback carried through to the decode-side _Flight
+    est_ttft: float = 0.0
+    est_tpot: float = 0.0
+    complexity: float = 0.0
 
 
 class ClusterServer:
@@ -361,7 +374,9 @@ class ClusterServer:
 
     def _start_handoff(self, sreq: ServeRequest, prefill_pair: int,
                        decode_pair: int, category: int = -1,
-                       est_cost: float = 0.0) -> bool:
+                       est_cost: float = 0.0, est_ttft: float = 0.0,
+                       est_tpot: float = 0.0,
+                       complexity: float = 0.0) -> bool:
         """Disaggregated dispatch: run the prefill leg now, put the exported
         KV on the transfer-in-flight queue. Returns False when the route
         cannot hand off (no paged stores, same node, or nothing block-aligned
@@ -405,7 +420,8 @@ class ClusterServer:
             sreq=sreq, prefill_pair=prefill_pair, decode_pair=decode_pair,
             block_ids=block_ids, tokens=tokens, n_cov=n_cov, payload=payload,
             depart_tick=self.ticks, eta=self.ticks + ticks,
-            category=category, est_cost=est_cost)
+            category=category, est_cost=est_cost, est_ttft=est_ttft,
+            est_tpot=est_tpot, complexity=complexity)
         self._handoffs += 1
         self.tracer.event(sreq.request_id, "handoff-start", self.ticks,
                           node=node_p, decode_node=node_q,
@@ -452,14 +468,20 @@ class ClusterServer:
                 and decision.prefill_pair != decision.pair
                 and self._start_handoff(sreq, decision.prefill_pair,
                                         decision.pair, category=cat,
-                                        est_cost=decision.est_cost)):
+                                        est_cost=decision.est_cost,
+                                        est_ttft=decision.est_ttft,
+                                        est_tpot=decision.est_tpot,
+                                        complexity=float(
+                                            decision.features[0]))):
             return decision
         self._dispatch(sreq, decision.pair)
         self.inflight[sreq.request_id] = _Flight(
             sreq=sreq, pair=decision.pair, iters=iters,
             depart_tick=self.ticks, category=cat,
             est_cost=decision.est_cost, attempt=attempt,
-            timeout_ticks=self._timeout_ticks(cat))
+            timeout_ticks=self._timeout_ticks(cat),
+            est_ttft=decision.est_ttft, est_tpot=decision.est_tpot,
+            complexity=float(decision.features[0]))
         return decision
 
     # -- public ------------------------------------------------------------------
@@ -547,7 +569,11 @@ class ClusterServer:
                                              hedge_pair=fl.hedge_pair,
                                              depart_tick=fl.depart_tick,
                                              category=cat,
-                                             est_cost=decision.est_cost)
+                                             est_cost=decision.est_cost,
+                                             est_ttft=decision.est_ttft,
+                                             est_tpot=decision.est_tpot,
+                                             complexity=float(
+                                                 decision.features[0]))
         # dead copies are cancelled above, so no slot still pins a block
         for pair, eng in self.engines.items():
             if int(pair_node[pair]) == node:
@@ -623,7 +649,9 @@ class ClusterServer:
             self.inflight[rid] = _Flight(
                 sreq=tr.sreq, pair=tr.decode_pair, depart_tick=self.ticks,
                 category=tr.category, est_cost=tr.est_cost,
-                timeout_ticks=self._timeout_ticks(tr.category))
+                timeout_ticks=self._timeout_ticks(tr.category),
+                est_ttft=tr.est_ttft, est_tpot=tr.est_tpot,
+                complexity=tr.complexity, prefill_node=node_p)
         # drain due retries (transient bounces and timed-out requests) —
         # after fault transitions so they route against this tick's masks
         for rid in [r for r, (due, _, _) in self._retry_queue.items()
@@ -705,6 +733,22 @@ class ClusterServer:
                               node=node, category=fl.category)
                     m.observe("spend", float(fl.est_cost), node=node,
                               category=fl.category)
+                    if (self.monitor.estimator is not None
+                            and (fl.est_ttft > 0.0 or fl.est_tpot > 0.0)):
+                        # close the online-learning loop: realized engine
+                        # steps vs the estimates the decision acted on (the
+                        # multiplicative residual absorbs the model-seconds
+                        # -> engine-steps unit scale); prefill residual on
+                        # the prefill-leg node of disaggregated routes
+                        self.monitor.feed_estimator(
+                            fl.category,
+                            fl.prefill_node if fl.prefill_node >= 0
+                            else node,
+                            node, fl.sreq.req.prompt_tokens, fl.complexity,
+                            OnlineEstimator.ratio(
+                                fl.est_ttft, float(res["ttft_steps"])),
+                            OnlineEstimator.ratio(
+                                fl.est_tpot, float(res["tpot_steps"])))
                     if self.tracer.enabled:
                         self.tracer.phase(rid, "serve", fl.depart_tick, lat,
                                           node)

@@ -136,6 +136,30 @@ def test_architecture_doc_has_resilience_section():
         assert needle in doc, f"resilience docs miss: {needle}"
 
 
+def test_architecture_doc_has_learning_section():
+    """The online-learning section must exist and cover both update rules,
+    the cold-start/residual contract, the clock/feature contract, the
+    PolicyInputs override, and the bandit policy."""
+    doc = (REPO / "docs" / "architecture.md").read_text()
+    assert "Online-learned estimators & bandit routing" in doc
+    for needle in ("repro.learn", "LearnConfig", "Sherman–Morrison",
+                   "EvalConfig(learned=True", "OnlineEstimator",
+                   "corrected_rows", "feed_estimator", "cold start",
+                   "Clock/feature contract", "PolicyInputs override",
+                   "`bandit`", "learn_state", "residual",
+                   'requires={"quality"}'):
+        assert needle in doc, f"learning docs miss: {needle}"
+
+
+def test_readme_and_bench_readme_name_learning():
+    readme = (REPO / "README.md").read_text()
+    assert "src/repro/learn/" in readme and "bandit" in readme
+    assert "learned" in readme
+    bench = (REPO / "benchmarks" / "README.md").read_text()
+    assert "online_learning.py" in bench and "BENCH_learning.json" in bench
+    assert "estimator error" in bench
+
+
 def test_readme_and_bench_readme_name_chaos():
     readme = (REPO / "README.md").read_text()
     assert "src/repro/faults/" in readme and "chaos.py" in readme

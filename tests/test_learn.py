@@ -1,0 +1,226 @@
+"""repro.learn tests: jnp≡py estimator-update parity (property-style over
+both estimator kinds), convergence-to-truth under stationary synthetic
+observations, the cold-start contract (learned=True routes byte-identically
+to the static-prior baseline before any observation — and, fault-free, for
+the whole run), and the live serving loop (router -> monitor estimator ->
+record feedback)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # soft optional dep
+from conftest import make_session_trace, shared_cluster
+
+from repro.core.fitness import EvalConfig, TraceEvaluator
+from repro.core.policies import get_policy
+from repro.core.router import RequestRouter
+from repro.learn import (FEAT_DIM, N_CATEGORIES, N_SIGNALS, LearnConfig,
+                         OnlineEstimator, features, init_state, predict_jnp,
+                         predict_np, state_size, update_jnp, update_np)
+
+CLUSTER = shared_cluster()
+N_NODES = 4
+CONC = np.array([8, 4, 4, 4], np.int64)   # paper testbed concurrency
+KINDS = ["ewma", "blr"]
+
+
+def _rand_obs(rng):
+    """One synthetic (category, nodes, features, targets) observation."""
+    cat = int(rng.integers(0, N_CATEGORIES))
+    node_p = int(rng.integers(0, N_NODES))
+    node_q = int(rng.integers(0, N_NODES))
+    pt = float(rng.integers(8, 512))
+    cx = float(rng.random())
+    queue = rng.integers(0, 10, N_NODES).astype(np.int64)
+    ys = rng.normal(0.0, 0.5, 3).astype(np.float32)
+    return cat, node_p, node_q, pt, cx, queue, ys
+
+
+# ---------------------------------------------------------------------------
+# jnp ≡ py update/predict parity, property-style over both estimator kinds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_update_and_predict_jnp_matches_np(kind, seed):
+    """The same update rule runs inside the JAX scan carry and the DES event
+    loops: states and predictions must stay *bitwise* equal through a chain
+    of randomized observations (argmax tie-breaks downstream depend on it)."""
+    cfg = LearnConfig(kind=kind)
+    rng = np.random.default_rng(seed)
+    s_np = init_state(cfg, N_NODES)
+    s_j = jnp.asarray(s_np)
+    for _ in range(6):
+        cat, node_p, node_q, pt, cx, queue, ys = _rand_obs(rng)
+        x1, x2, x3 = features(np, pt, cx, queue, CONC)
+        s_np = update_np(cfg, s_np, N_NODES, cat, node_p, node_q,
+                         x1, x2, x3, *ys)
+        x1j, x2j, x3j = features(jnp, jnp.float32(pt), jnp.float32(cx),
+                                 jnp.asarray(queue), jnp.asarray(CONC))
+        s_j = update_jnp(cfg, s_j, N_NODES, cat, node_p, node_q,
+                         x1j, x2j, x3j, *(jnp.float32(y) for y in ys))
+        np.testing.assert_array_equal(s_np, np.asarray(s_j))
+        want = predict_np(cfg, s_np, N_NODES, cat, x1, x2, x3)
+        got = predict_jnp(cfg, s_j, N_NODES, cat, x1j, x2j, x3j)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w, np.float32),
+                                          np.asarray(g))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_state_layout_and_neutral_seed(kind):
+    cfg = LearnConfig(kind=kind)
+    s = init_state(cfg, N_NODES)
+    assert s.shape == (state_size(cfg, N_NODES),)
+    assert s.dtype == np.float32
+    # neutral seed: zero residuals and (for BLR) prior-scaled identity A⁻¹
+    d_p, d_t, d_q, unc = predict_np(cfg, s, N_NODES, 0, np.float32(0.25),
+                                    np.float32(0.5),
+                                    np.zeros(N_NODES, np.float32))
+    np.testing.assert_array_equal(d_p, 0.0)
+    np.testing.assert_array_equal(d_t, 0.0)
+    np.testing.assert_array_equal(d_q, 0.0)
+    assert (np.asarray(unc) > 0).all()
+    if kind == "blr":
+        s4 = s.reshape(N_NODES, N_CATEGORIES, N_SIGNALS, cfg.slot)
+        A = s4[0, 0, 0, :FEAT_DIM * FEAT_DIM].reshape(FEAT_DIM, FEAT_DIM)
+        np.testing.assert_allclose(A, np.eye(FEAT_DIM) / cfg.prior)
+
+
+# ---------------------------------------------------------------------------
+# convergence to truth under stationary synthetic observations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_estimator_converges_to_stationary_truth(kind):
+    """Feeding a constant residual (node 2 runs 1.8x slower than its static
+    table, quality 0.1 above its prior) plus noise must converge the
+    prediction to the truth, shrink uncertainty on observed slots, and leave
+    unobserved nodes exactly neutral."""
+    cfg = LearnConfig(kind=kind)
+    rng = np.random.default_rng(0)
+    truth_lat, truth_q = 0.8, 0.1
+    s0 = init_state(cfg, N_NODES)
+    s = s0
+    for _ in range(300):
+        queue = rng.integers(0, 4, N_NODES).astype(np.int64)
+        x1, x2, x3 = features(np, float(rng.integers(64, 256)),
+                              float(rng.random()), queue, CONC)
+        y = np.float32(truth_lat + rng.normal(0.0, 0.05))
+        s = update_np(cfg, s, N_NODES, 1, 2, 2, x1, x2, x3, y, y,
+                      np.float32(truth_q + rng.normal(0.0, 0.02)))
+    x3q = np.zeros(N_NODES, np.float32)
+    d_p, d_t, d_q, unc = predict_np(cfg, s, N_NODES, 1, np.float32(0.25),
+                                    np.float32(0.5), x3q)
+    assert abs(float(d_p[2]) - truth_lat) < 0.15
+    assert abs(float(d_t[2]) - truth_lat) < 0.15
+    assert abs(float(d_q[2]) - truth_q) < 0.05
+    # unobserved (node, category) slots stay exactly on the static tables
+    assert float(d_p[0]) == 0.0 and float(d_t[3]) == 0.0
+    unc0 = predict_np(cfg, s0, N_NODES, 1, np.float32(0.25), np.float32(0.5),
+                      x3q)[3]
+    assert float(unc[2]) < float(unc0[2])
+    # other categories of the same node are independent slots
+    assert float(predict_np(cfg, s, N_NODES, 0, np.float32(0.25),
+                            np.float32(0.5), x3q)[0][2]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# cold-start contract: learned=True ≡ static-prior baseline pre-observation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_fault_free_learned_run_matches_static_baseline(kind):
+    """Fault-free, the latency observations are exactly zero (x/x ratios),
+    so a whole learned run stays byte-identical to the static baseline for
+    estimate-consuming policies — the strongest form of the cold-start
+    seeding requirement."""
+    tr = make_session_trace(n_requests=60, seed=11)
+    g = get_policy("slo").genome_spec.defaults
+    cfg = EvalConfig(mode="open", prefix_cache=True)
+    base = TraceEvaluator(tr, CLUSTER, cfg).run_policy("slo", g)
+    lrn = TraceEvaluator(
+        tr, CLUSTER, dataclasses.replace(cfg, learned=True,
+                                         learner=LearnConfig(kind=kind))
+    ).run_policy("slo", g)
+    np.testing.assert_array_equal(np.asarray(base.assign),
+                                  np.asarray(lrn.assign))
+    for f in ("q", "cost", "rt", "ttft", "tpot"):
+        np.testing.assert_array_equal(np.asarray(getattr(base, f)),
+                                      np.asarray(getattr(lrn, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_bandit_first_decision_matches_static_prior(kind):
+    """The bandit's exploration bonus is constant across pairs at cold start
+    (neutral state, empty queues), so its *first* decision pre-observation is
+    byte-identical with learned=True vs False."""
+    tr = make_session_trace(n_requests=40, seed=13)
+    g = get_policy("bandit").genome_spec.defaults
+    cfg = EvalConfig(mode="open", prefix_cache=True)
+    base = TraceEvaluator(tr, CLUSTER, cfg).run_policy("bandit", g)
+    lrn = TraceEvaluator(
+        tr, CLUSTER, dataclasses.replace(cfg, learned=True,
+                                         learner=LearnConfig(kind=kind))
+    ).run_policy("bandit", g)
+    assert int(np.asarray(base.assign)[0]) == int(np.asarray(lrn.assign)[0])
+
+
+@pytest.mark.parametrize("mode", ["slo", "bandit"])
+@pytest.mark.parametrize("kind", KINDS)
+def test_router_cold_start_first_decision_matches_static(mode, kind):
+    """Live-path twin of the cold-start contract: the first RequestRouter
+    decision with learned=True matches the static router byte-for-byte."""
+    req = make_session_trace(n_requests=4, seed=17).requests[0]
+    d0 = RequestRouter(CLUSTER, mode=mode).route(req)
+    d1 = RequestRouter(CLUSTER, mode=mode, learned=True,
+                       learner=LearnConfig(kind=kind)).route(req)
+    assert (d0.pair, d0.node) == (d1.pair, d1.node)
+
+
+# ---------------------------------------------------------------------------
+# live serving loop: router estimates -> record() feedback -> corrections
+# ---------------------------------------------------------------------------
+def test_router_record_feeds_estimator_and_corrects_estimates():
+    tr = make_session_trace(n_requests=40, seed=19)
+    router = RequestRouter(CLUSTER, mode="bandit", learned=True)
+    est = router.monitor.estimator
+    assert isinstance(est, OnlineEstimator)
+    for req in tr.requests:
+        d = router.route(req)
+        assert d.est_ttft > 0.0 and d.est_tpot > 0.0
+        # realized latencies consistently 2x the estimates
+        router.record(req, d, quality=0.8, cost=d.est_cost, rt=1.0,
+                      ttft=2.0 * d.est_ttft, tpot=2.0 * d.est_tpot)
+    assert est.n_obs == tr.n_requests
+    d_p, d_t, _, _ = est.predict(0, 128, 0.5, np.zeros(N_NODES, np.int64),
+                                 CONC)
+    # the 2x slowdown shows up as a ~+1.0 multiplicative residual on at
+    # least the node the bandit kept routing to
+    assert float(np.max(d_p)) > 0.5 and float(np.max(d_t)) > 0.5
+
+
+def test_record_without_latency_feedback_leaves_estimator_neutral():
+    tr = make_session_trace(n_requests=8, seed=23)
+    router = RequestRouter(CLUSTER, mode="slo", learned=True)
+    for req in tr.requests:
+        d = router.route(req)
+        router.record(req, d, quality=0.5, cost=1e-4, rt=1.0)  # no ttft/tpot
+    assert router.monitor.estimator.n_obs == 0
+
+
+def test_monitor_feed_estimator_noop_without_estimator():
+    from repro.cluster.monitor import ClusterMonitor
+    mon = ClusterMonitor(2)
+    mon.feed_estimator(0, 0, 0, 128, 0.5, 0.2, 0.1)   # must not raise
+    mon2 = ClusterMonitor(2)
+    mon2.estimator = OnlineEstimator(LearnConfig(), 2)
+    mon2.feed_estimator(0, 0, 1, 128, 0.5, 0.2, 0.1)
+    assert mon2.estimator.n_obs == 1
+
+
+def test_online_estimator_ratio_contract():
+    assert OnlineEstimator.ratio(0.0, 5.0) == 0.0       # unobservable
+    assert OnlineEstimator.ratio(2.0, 2.0) == 0.0       # on-estimate
+    assert OnlineEstimator.ratio(2.0, 4.0) == pytest.approx(1.0)
+    assert OnlineEstimator.ratio(2.0, 1.0) == pytest.approx(-0.5)

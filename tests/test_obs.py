@@ -183,16 +183,18 @@ def test_audit_ring_and_explain():
 
 
 # ---------------------------------------------------------------------------
-# monitor satellites: heartbeat now-shim + EWMA seeding regression
+# monitor satellites: heartbeat clock contract + EWMA seeding regression
 # ---------------------------------------------------------------------------
-def test_heartbeat_without_now_warns_deprecation():
+def test_heartbeat_requires_explicit_now():
+    """The wall-clock fallback shim is gone: ``now`` is a required argument
+    (callers own the clock), and passing it never warns."""
     mon = ClusterMonitor(2)
-    with pytest.warns(DeprecationWarning, match="now="):
+    with pytest.raises(TypeError):
         mon.heartbeat(0)
-    assert mon.stats[0].healthy
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        mon.heartbeat(1, now=42.0)   # explicit clock: no warning
+        mon.heartbeat(1, now=42.0)
+    assert mon.stats[1].healthy
     assert mon.stats[1].last_heartbeat == 42.0
 
 

@@ -148,6 +148,47 @@ def test_policy_decisions_jax_match_des_oracles(policy):
                                        err_msg=f"{policy}:{f}")
 
 
+@pytest.mark.parametrize("policy", list_policies())
+def test_policy_decisions_match_with_learning_enabled(policy):
+    """3-way equivalence with EvalConfig(learned=True): the learned-estimator
+    carry (repro.learn) updates inside the JAX scan and inside both DES event
+    loops must stay bit-compatible, so every registered policy still routes
+    identically across all three implementations — under a straggler schedule
+    that makes the latency observations non-trivially non-zero."""
+    from repro.faults import FaultSchedule, Straggler
+    from repro.learn import LearnConfig
+
+    tr = make_session_trace(n_requests=60, seed=7)
+    pol = get_policy(policy)
+    if pol.genome_spec.per_request:
+        genome = np.random.default_rng(0).integers(
+            0, CLUSTER.n_pairs, tr.n_requests).astype(np.int32)
+    else:
+        genome = pol.genome_spec.defaults
+    disagg = pol.decides == "route"
+    sched = FaultSchedule(stragglers=(Straggler(1, 0.0, 1e9, 3.0),
+                                      Straggler(2, 5.0, 60.0, 2.0)))
+    # the BLR kind gets its registry-wide coverage from the bandit (its
+    # primary consumer); everything else runs the EWMA kind to keep the
+    # parametrized sweep cheap
+    kind = "blr" if policy == "bandit" else "ewma"
+    cfg = EvalConfig(mode="open", prefix_cache=True, disaggregated=disagg,
+                     learned=True, learner=LearnConfig(kind=kind),
+                     faulty=True)
+    ev = TraceEvaluator(tr, CLUSTER, cfg, faults=sched)
+    res = ev.run_policy(policy, genome)
+    sim = ClusterSimulator(tr, CLUSTER, prefix_cache=True,
+                           disaggregated=disagg, faults=sched, learned=True,
+                           learner=LearnConfig(kind=kind))
+    for sr in (sim.run(policy=policy, genome=genome),
+               sim.run_event_heap(policy=policy, genome=genome)):
+        np.testing.assert_array_equal(np.asarray(res.assign), sr.assign)
+        for f in ("q", "cost", "rt", "ttft", "tpot"):
+            np.testing.assert_allclose(np.asarray(getattr(res, f)),
+                                       getattr(sr, f), rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{policy}:{f}")
+
+
 def test_open_loop_sparse_arrivals_have_no_wait():
     """Arrivals far apart ⇒ every slot free on arrival ⇒ zero queue wait."""
     tr = build_open_loop_trace(40, (PhaseSpec(rate=0.01, duration=1e5),),

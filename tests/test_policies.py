@@ -48,7 +48,9 @@ def _random_inputs(rng, n_genes_direct=32, index=None):
         prompt_cost=rng.uniform(0, 5e-4, n_pairs).astype(np.float32),
         hit_frac=rng.uniform(0, 1, n_pairs).astype(np.float32),
         queue_len=rng.integers(0, 10, n_nodes),
-        kv_bytes=np.float32(rng.uniform(0.0, 2e6)))
+        kv_bytes=np.float32(rng.uniform(0.0, 2e6)),
+        quality=rng.uniform(0, 1, n_pairs).astype(np.float32),
+        unc=rng.uniform(0, 1, n_pairs).astype(np.float32))
 
 
 def _random_genome(pol, rng, n_genes_direct=32):
@@ -131,7 +133,7 @@ def test_decide_jnp_matches_py_fixed_seeds(policy):
 
 
 # ---------------------------------------------------------------------------
-# error surface + deprecation shims
+# error surface + legacy-name removal
 # ---------------------------------------------------------------------------
 def test_unknown_policy_raises_value_error_listing_names():
     tr = build_trace(8, seed=0)
@@ -154,21 +156,22 @@ def test_per_request_policy_rejected_by_router():
     assert "p2c-hedge" in str(ei.value)   # runtime-capable set is listed
 
 
-def test_legacy_genome_strings_warn_but_work():
+def test_legacy_genome_strings_are_gone():
+    """The "continuous"/"discrete" alias shims are removed: legacy names
+    fail like any other unknown policy (ValueError listing the registry),
+    and canonical names resolve warning-free."""
     tr = build_trace(8, seed=0)
     attach_slos(tr, seed=0)
     ev = TraceEvaluator(tr, CLUSTER)
-    with pytest.warns(DeprecationWarning, match="continuous"):
-        fit = ev.make_fitness("continuous")
-    g = jnp.asarray([get_policy("threshold").genome_spec.defaults] * 2)
-    F, viol = fit(g, jax.random.key(0))
-    assert F.shape == (2, 3)
-    with pytest.warns(DeprecationWarning, match="discrete"):
-        ev.make_fitness("discrete")
-    # canonical names stay silence-clean
+    for legacy in ("continuous", "discrete"):
+        with pytest.raises(ValueError) as ei:
+            ev.make_fitness(legacy)
+        assert "threshold" in str(ei.value)   # registry names are listed
+        with pytest.raises(ValueError):
+            RequestRouter(CLUSTER, mode=legacy)
     import warnings
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
+        warnings.simplefilter("error")
         ev.make_fitness("slo")
         RequestRouter(CLUSTER, mode="slo")
 
